@@ -1,0 +1,56 @@
+"""Per-kernel microbenchmarks: XLA device path (what the offload engine runs
+here) timed against the numpy host BLAS, plus interpret-mode Pallas
+correctness spot checks (interpret is a correctness harness, not a timing
+one — the Pallas kernels' performance claim is structural: 128-aligned MXU
+tiles, VMEM-resident accumulators; see DESIGN.md)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bench(fn, *args, repeats=5):
+    fn(*args)  # warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") or isinstance(out, jax.Array) else None
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6  # us
+
+
+def run() -> list[str]:
+    from repro.kernels import ref
+    jax.config.update("jax_enable_x64", True)
+    rng = np.random.default_rng(0)
+    lines = []
+    for m, k in [(512, 256), (1024, 512), (2048, 512)]:
+        a = jnp.asarray(rng.standard_normal((m, k)))
+        b = jnp.asarray(rng.standard_normal((m, k)))
+        g = jax.jit(ref.ref_gemm_nt)
+        us = _bench(g, a, b)
+        flops = 2 * m * m * k
+        lines.append(f"gemm_nt_xla_{m}x{k},{us:.1f},{flops / us * 1e-3:.2f}GFLOP/s")
+        s = jax.jit(ref.ref_syrk_ln)
+        us = _bench(s, a)
+        lines.append(f"syrk_ln_xla_{m}x{k},{us:.1f},{flops / 2 / us * 1e-3:.2f}GFLOP/s")
+    for w in (256, 512):
+        Mw = np.tril(rng.standard_normal((w, w))) + w * np.eye(w)
+        B = rng.standard_normal((2048, w))
+        t = jax.jit(ref.ref_trsm_rlt)
+        us = _bench(t, jnp.asarray(Mw), jnp.asarray(B))
+        lines.append(f"trsm_rlt_xla_w{w},{us:.1f},m2048")
+        A = Mw @ Mw.T + w * np.eye(w)
+        p = jax.jit(ref.ref_potrf)
+        us = _bench(p, jnp.asarray(A))
+        lines.append(f"potrf_xla_w{w},{us:.1f},")
+    # pallas interpret-mode correctness spot check (tiny shapes)
+    from repro.kernels import ops
+    a = jnp.asarray(rng.standard_normal((160, 96)))
+    err = float(jnp.abs(ops.gemm_nt(a, a, backend="pallas") - ref.ref_gemm_nt(a, a)).max())
+    lines.append(f"pallas_gemm_interpret_check,,maxerr={err:.2e}")
+    return lines

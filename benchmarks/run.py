@@ -1,0 +1,100 @@
+"""Benchmark harness — one entry per paper table/figure plus kernel and
+roofline summaries.  Prints ``name,us_per_call,derived`` CSV sections.
+
+    PYTHONPATH=src python -m benchmarks.run            # moderate suite
+    PYTHONPATH=src python -m benchmarks.run --quick    # tiny suite (CI)
+    PYTHONPATH=src python -m benchmarks.run --full     # everything
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+QUICK_SUITE = ["elast3d_12", "kkt_192", "lap3d_24", "lap2d_256"]
+DEFAULT_SUITE = ["lap2d_256", "lap2d_384", "lap2d9_256", "lap3d_24",
+                 "lap3d_32", "lap3d27_24", "elast3d_12", "elast3d_16",
+                 "kkt_192"]
+
+
+def bench_cholesky(suite) -> None:
+    import time
+    from benchmarks import cholesky_tables as ct
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    rows = []
+    for name in suite:  # one matrix at a time: partial results survive kills
+        t0 = time.time()
+        rows.extend(ct.run_suite([name]))
+        print(f"# done {name} in {time.time() - t0:.0f}s", flush=True)
+        (RESULTS / "cholesky_suite.json").write_text(json.dumps(rows, indent=2))
+    print("\n# Table I — GPU-accelerated RL (speedup vs best CPU-only)")
+    print(ct.table1(rows))
+    print("\n# Table II — GPU-accelerated RLB (speedup vs best CPU-only)")
+    print(ct.table2(rows))
+    print("\n# Figure 3 — performance profile (fraction within tau of best)")
+    print(ct.fig3_profile(rows))
+    resid = max(r.get("rl_resid", 0) + r.get("rl_gpu_resid", 0) for r in rows)
+    print(f"\n# residual sanity: max {resid:.3e}")
+
+
+def bench_kernels() -> None:
+    from benchmarks import kernel_bench
+    print("\n# Kernels — name,us_per_call,derived")
+    for line in kernel_bench.run():
+        print(line)
+
+
+def bench_roofline() -> None:
+    """Summarize cached dry-run roofline records (produced by
+    repro.launch.dryrun; see EXPERIMENTS.md §Roofline)."""
+    d = RESULTS / "dryrun"
+    if not d.exists():
+        print("\n# Roofline — no dryrun results cached (run repro.launch.dryrun)")
+        return
+    print("\n# Roofline — arch,shape,mesh,bound,t_compute,t_memory,t_collective,"
+          "model_vs_hlo_flops,mfu_at_roofline")
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("skipped"):
+            print(f"{r['arch']},{r['shape']},{r['mesh']},SKIPPED,,,,,")
+            continue
+        if not r.get("ok"):
+            print(f"{r['arch']},{r['shape']},{r['mesh']},FAILED,,,,,")
+            continue
+        rf = r["roofline"]
+        print(f"{r['arch']},{r['shape']},{r['mesh']},{rf['bound']},"
+              f"{rf['t_compute_s']:.3e},{rf['t_memory_s']:.3e},"
+              f"{rf['t_collective_s']:.3e},"
+              f"{rf.get('model_vs_hlo_flops', 0):.3f},"
+              f"{rf.get('mfu_at_roofline', 0):.4f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    choices=[None, "cholesky", "kernels", "roofline"])
+    args = ap.parse_args()
+
+    if args.quick:
+        suite = QUICK_SUITE
+    elif args.full:
+        from repro.sparse import MATRIX_SUITE
+        suite = list(MATRIX_SUITE)
+    else:
+        suite = DEFAULT_SUITE
+
+    if args.only in (None, "cholesky"):
+        bench_cholesky(suite)
+    if args.only in (None, "kernels"):
+        bench_kernels()
+    if args.only in (None, "roofline"):
+        bench_roofline()
+
+
+if __name__ == "__main__":
+    main()

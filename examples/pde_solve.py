@@ -1,0 +1,49 @@
+"""End-to-end PDE workflow: assemble a 3-D variable-coefficient diffusion
+operator, factor it ONCE with offloaded RLB (the low-memory variant — the
+paper's choice for matrices whose update matrices do not fit on the GPU),
+then reuse the factor for many right-hand sides (time stepping).
+
+    PYTHONPATH=src python examples/pde_solve.py
+"""
+import time
+
+import numpy as np
+import scipy.sparse as sp
+
+from repro.core import DeviceEngine, cholesky
+from repro.sparse import laplacian_3d
+
+nx = 20
+A = laplacian_3d(nx)
+n = A.shape[0]
+# variable coefficients: scale rows/cols by a smooth field (stays SPD)
+coeff = 1.0 + 0.5 * np.sin(np.linspace(0, 6.28, n))
+D = sp.diags(np.sqrt(coeff))
+A = sp.csc_matrix(D @ A @ D)
+A.sort_indices()
+
+print(f"operator: n={n}, nnz={A.nnz}")
+t0 = time.time()
+F = cholesky(A, method="rlb", device_engine=DeviceEngine(),
+             offload_threshold=30_000, batch_transfers=True)
+print(f"factorization: {time.time() - t0:.2f}s "
+      f"(on-device supernodes: {F.stats['supernodes_on_device']})")
+
+# implicit-Euler time stepping: (I + dt*A) u' = u  — reuse the factor of A
+# by factoring M = I + dt*A once
+dt = 0.1
+M = sp.csc_matrix(sp.eye(n) + dt * A)
+FM = cholesky(M, method="rlb")
+u = np.exp(-((np.arange(n) - n / 2) ** 2) / (n / 8) ** 2)  # gaussian bump
+energy = [float(u @ u)]
+t0 = time.time()
+for step in range(20):
+    u = FM.solve(u)
+    energy.append(float(u @ u))
+print(f"20 implicit steps: {time.time() - t0:.2f}s")
+print("energy decay:", " ".join(f"{e:.3f}" for e in energy[:8]), "...")
+# sanity: one more solve round-trip
+r = M @ FM.solve(u) - u
+print(f"solve residual: {np.linalg.norm(r) / np.linalg.norm(u):.2e}")
+assert np.linalg.norm(r) / np.linalg.norm(u) < 1e-10
+print("OK")

@@ -1,0 +1,95 @@
+"""Architecture / shape registry.
+
+10 assigned architectures x 4 input-shape sets = 40 cells.  ``long_500k``
+requires sub-quadratic attention over the cached context and is only run for
+the SSM/hybrid architectures (the KV cache of a pure full-attention arch at
+524288 positions is still *decodable* in principle, but the spec's intent —
+and DESIGN.md §Arch-applicability — marks those cells as skipped).
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+_MODULES = {
+    "llava-next-34b": "llava_next_34b",
+    "llama3.2-1b": "llama3_2_1b",
+    "granite-20b": "granite_20b",
+    "yi-9b": "yi_9b",
+    "yi-6b": "yi_6b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "dbrx-132b": "dbrx_132b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "musicgen-large": "musicgen_large",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq: int
+    batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE
+
+
+def cell_supported(arch: str, shape: str) -> tuple[bool, str]:
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    if spec.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, ("long_500k needs sub-quadratic context handling; "
+                       f"{arch} is pure full-attention (see DESIGN.md)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (weak-type-correct, shardable, no device allocation)."""
+    spec = SHAPES[shape]
+    B, S = spec.batch, spec.seq
+    i32 = jnp.int32
+    out: dict = {}
+    if spec.kind == "train":
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        out["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.frontend_tokens:
+            out["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.d_model), cfg.compute_dtype)
+    elif spec.kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.frontend_tokens:
+            out["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.d_model), cfg.compute_dtype)
+    else:  # decode
+        out["tokens"] = jax.ShapeDtypeStruct((B, 1), i32)
+        out["cache_len"] = jax.ShapeDtypeStruct((), i32)
+    return out

@@ -1,0 +1,40 @@
+"""repro.core — the paper's contribution: supernodal right-looking sparse
+Cholesky (RL and RLB variants) with accelerator offload of the large dense
+BLAS operations."""
+import jax as _jax
+
+# the paper factors in double precision (DPOTRF/DTRSM/...); keep the solver's
+# device path in f64 too.  Model/training code is unaffected (explicit dtypes).
+_jax.config.update("jax_enable_x64", True)
+
+from repro.core.api import cholesky, solve, symbolic_pipeline
+from repro.core.engines import DeviceEngine
+from repro.core.merge import merge_supernodes
+from repro.core.numeric import (
+    CholeskyFactor,
+    HostEngine,
+    OffloadPolicy,
+    factorize_rl,
+    factorize_rlb,
+    init_panels,
+)
+from repro.core.refine import refine_partition
+from repro.core.relind import ancestor_updates, count_blas_calls, count_blocks, supernode_blocks
+from repro.core.symbolic import (
+    SymbolicFactor,
+    col_counts,
+    etree,
+    find_supernodes,
+    postorder,
+    symbolic_analyze,
+)
+
+__all__ = [
+    "cholesky", "solve", "symbolic_pipeline",
+    "merge_supernodes", "refine_partition",
+    "CholeskyFactor", "HostEngine", "OffloadPolicy",
+    "factorize_rl", "factorize_rlb", "init_panels",
+    "ancestor_updates", "count_blas_calls", "count_blocks", "supernode_blocks",
+    "SymbolicFactor", "col_counts", "etree", "find_supernodes", "postorder",
+    "symbolic_analyze",
+]

@@ -1,0 +1,94 @@
+"""Public API for the sparse Cholesky library.
+
+    from repro.core import cholesky
+    F = cholesky(A, method="rl", offload_threshold=600_000)
+    x = F.solve(b)
+"""
+from __future__ import annotations
+
+import numpy as np
+import scipy.sparse as sp
+
+from repro.core.merge import merge_supernodes
+from repro.core.numeric import (
+    CholeskyFactor,
+    HostEngine,
+    OffloadPolicy,
+    factorize_rl,
+    factorize_rlb,
+)
+from repro.core.refine import refine_partition
+from repro.core.symbolic import SymbolicFactor, symbolic_analyze
+from repro.sparse.ordering import fill_reducing_ordering
+
+
+def symbolic_pipeline(
+    A: sp.spmatrix,
+    *,
+    ordering: str = "nd",
+    merge: bool = True,
+    refine: bool = True,
+    max_growth: float = 0.25,
+) -> tuple[SymbolicFactor, sp.csc_matrix]:
+    """The paper's full preprocessing pipeline: fill-reducing ordering ->
+    symbolic factorization -> supernode amalgamation (25% storage cap) ->
+    partition refinement.  Returns (sym, permuted matrix)."""
+    A = sp.csc_matrix(A)
+    order = fill_reducing_ordering(A, ordering)
+    sym, Aperm = symbolic_analyze(A, order=order)
+    if merge:
+        sym = merge_supernodes(sym, max_growth=max_growth)
+    if refine:
+        sym, g = refine_partition(sym)
+        Aperm = Aperm[g][:, g].tocsc()
+        Aperm.sort_indices()
+    return sym, Aperm
+
+
+def cholesky(
+    A: sp.spmatrix,
+    *,
+    method: str = "rl",
+    ordering: str = "nd",
+    merge: bool = True,
+    refine: bool = True,
+    max_growth: float = 0.25,
+    device_engine=None,
+    offload_threshold: int | None = None,
+    batch_transfers: bool = False,
+    sym: SymbolicFactor | None = None,
+    Aperm: sp.csc_matrix | None = None,
+) -> CholeskyFactor:
+    """Factor a sparse SPD matrix.
+
+    method            'rl' or 'rlb' (the two paper variants)
+    device_engine     accelerator engine (repro.core.engines.DeviceEngine);
+                      None = CPU-only baseline
+    offload_threshold supernode size (rows*width) above which work moves to
+                      the device (paper: 600k for RL, 750k for RLB); None
+                      with a device engine = offload everything ("GPU only")
+    batch_transfers   RLB only: paper's version 1 (single bulk transfer per
+                      supernode) instead of version 2 (per-block transfers)
+    sym / Aperm       reuse a precomputed symbolic factorization
+    """
+    if sym is None or Aperm is None:
+        sym, Aperm = symbolic_pipeline(
+            A, ordering=ordering, merge=merge, refine=refine, max_growth=max_growth
+        )
+    policy = None
+    if device_engine is not None:
+        policy = OffloadPolicy(threshold=offload_threshold if offload_threshold is not None else 0)
+    if method == "rl":
+        return factorize_rl(
+            sym, Aperm, engine=HostEngine(), device_engine=device_engine, policy=policy
+        )
+    if method == "rlb":
+        return factorize_rlb(
+            sym, Aperm, engine=HostEngine(), device_engine=device_engine,
+            policy=policy, batch_transfers=batch_transfers,
+        )
+    raise ValueError(f"unknown method {method!r} (want 'rl' or 'rlb')")
+
+
+def solve(A: sp.spmatrix, b: np.ndarray, **kw) -> np.ndarray:
+    return cholesky(A, **kw).solve(b)

@@ -1,0 +1,104 @@
+"""Generalized relative indices (Schreiber [3], Ashcraft [4]) and the block
+structure that drives RLB.
+
+For supernode ``s`` with tail rows ``t`` (the rows below its diagonal block):
+
+  * RL needs, for every ancestor ``a`` whose columns intersect ``t``, the
+    positions of *all* tail rows >= a's first column inside ``rows[a]``
+    ("generalized relative indices for each row in the supernode").
+
+  * RLB needs one relative index per *block*: a block is a maximal run of
+    tail rows that (i) land in the same ancestor's column range and (ii) are
+    contiguous in that ancestor's row structure.  Fewer/larger blocks mean
+    fewer/larger BLAS calls — which is what partition refinement optimizes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.symbolic import SymbolicFactor
+
+
+@dataclass
+class AncestorUpdate:
+    """Update footprint of supernode s inside ancestor a (for RL)."""
+    anc: int                  # ancestor supernode
+    k0: int                   # first tail position whose row is a column of a
+    k1: int                   # one past the last such position
+    col_off: np.ndarray       # (k1-k0,): column offsets inside a
+    rel_rows: np.ndarray      # positions in rows[a] of tail[k0:] (all rows >= a's start)
+
+
+def ancestor_updates(sym: SymbolicFactor, s: int) -> list[AncestorUpdate]:
+    w = sym.width(s)
+    t = sym.rows[s][w:]
+    out: list[AncestorUpdate] = []
+    m = t.shape[0]
+    k = 0
+    while k < m:
+        a = int(sym.snode[t[k]])
+        fa, la = int(sym.super_ptr[a]), int(sym.super_ptr[a + 1])
+        k1 = int(np.searchsorted(t, la))
+        rel = np.searchsorted(sym.rows[a], t[k:])
+        # membership sanity (cheap, catches symbolic bugs early)
+        # note: rows[a] must contain every tail row >= fa
+        out.append(AncestorUpdate(
+            anc=a, k0=k, k1=k1,
+            col_off=t[k:k1] - fa,
+            rel_rows=rel.astype(np.int64),
+        ))
+        k = k1
+    return out
+
+
+@dataclass
+class Block:
+    """A maximal tail-row run of supernode s contiguous inside ancestor anc."""
+    anc: int        # ancestor supernode owning these rows as columns
+    k0: int         # tail-position range [k0, k1)
+    k1: int
+    col_off0: int   # first column offset inside anc (columns are contiguous)
+    row_pos0: int   # first row position inside rows[anc] (rows are contiguous)
+
+
+def supernode_blocks(sym: SymbolicFactor, s: int) -> list[Block]:
+    """Partition the tail rows of s into RLB blocks."""
+    w = sym.width(s)
+    t = sym.rows[s][w:]
+    m = t.shape[0]
+    blocks: list[Block] = []
+    k = 0
+    while k < m:
+        a = int(sym.snode[t[k]])
+        fa, la = int(sym.super_ptr[a]), int(sym.super_ptr[a + 1])
+        k1 = int(np.searchsorted(t, la))
+        pos = np.searchsorted(sym.rows[a], t[k:k1]).astype(np.int64)
+        # split the [k, k1) run at discontinuities in the ancestor's rows
+        cut = np.flatnonzero(np.diff(pos) != 1) + 1
+        bounds = np.concatenate([[0], cut, [k1 - k]])
+        for b in range(bounds.shape[0] - 1):
+            b0, b1 = int(bounds[b]), int(bounds[b + 1])
+            blocks.append(Block(
+                anc=a, k0=k + b0, k1=k + b1,
+                col_off0=int(t[k + b0] - fa),
+                row_pos0=int(pos[b0]),
+            ))
+        k = k1
+    return blocks
+
+
+def count_blocks(sym: SymbolicFactor) -> int:
+    """Total number of RLB blocks — the quantity partition refinement reduces."""
+    return sum(len(supernode_blocks(sym, s)) for s in range(sym.nsuper))
+
+
+def count_blas_calls(sym: SymbolicFactor) -> int:
+    """Number of DSYRK/DGEMM calls RLB would make (one SYRK per block plus one
+    GEMM per ordered block pair)."""
+    total = 0
+    for s in range(sym.nsuper):
+        nb = len(supernode_blocks(sym, s))
+        total += nb * (nb + 1) // 2
+    return total

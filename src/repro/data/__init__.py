@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticTextDataset, make_train_iterator
+
+__all__ = ["SyntheticTextDataset", "make_train_iterator"]

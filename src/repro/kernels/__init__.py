@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the dense hot spots the paper offloads:
+
+    gemm   — C = A @ B^T            (DGEMM)
+    syrk   — C = tril(A @ A^T)      (DSYRK, lower)
+    trsm   — X = B @ L^{-T}         (DTRSM, right/lower/transpose) via
+             MAGMA-style pre-inverted diagonal blocks (GEMM-only kernel)
+    potrf  — L = chol(A)            (DPOTRF) blocked: in-kernel unblocked
+             Cholesky on the diagonal tile + trsm/syrk trailing updates
+
+All kernels use explicit BlockSpec VMEM tiling with 128-aligned tiles for the
+MXU.  ops.py wraps them with padding + jit; ref.py holds the pure-jnp oracles
+the tests sweep against (interpret=True executes the kernel bodies on CPU).
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import gemm_nt, potrf, syrk_ln, trsm_rlt
+
+__all__ = ["ops", "ref", "gemm_nt", "syrk_ln", "trsm_rlt", "potrf"]

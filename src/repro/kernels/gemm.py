@@ -1,0 +1,65 @@
+"""Pallas GEMM kernel:  C = A @ B^T  (the DGEMM the paper offloads to MAGMA).
+
+TPU mapping: 128x128 output tiles live in VMEM and are fed to the MXU by a
+sequential reduction over K-tiles (grid's innermost "arbitrary" dimension);
+the (i, j) output dimensions are parallel.  Accumulation happens in the
+output block ref, which Pallas keeps resident in VMEM across the K loop
+because its index_map is independent of k.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_nt_kernel(a_ref, b_ref, c_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    c_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...].T, preferred_element_type=c_ref.dtype
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def gemm_nt(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """C = A @ B^T.  a: (M, K), b: (N, K) -> (M, N).
+    M, N, K must be multiples of the block sizes (ops.py pads)."""
+    M, K = a.shape
+    N, Kb = b.shape
+    assert K == Kb, (a.shape, b.shape)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
+        (M, N, K), (block_m, block_n, block_k))
+    grid = (M // block_m, N // block_n, K // block_k)
+    kw = {}
+    if not interpret:
+        kw["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+    return pl.pallas_call(
+        _gemm_nt_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_n, block_k), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        interpret=interpret,
+        **kw,
+    )(a, b)

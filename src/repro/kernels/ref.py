@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the tests sweep shapes/dtypes
+and assert_allclose kernel-vs-oracle in interpret mode)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def ref_gemm_nt(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b.T, preferred_element_type=a.dtype)
+
+
+def ref_syrk_ln(a: jax.Array) -> jax.Array:
+    return jnp.tril(jnp.dot(a, a.T, preferred_element_type=a.dtype))
+
+
+def ref_trsm_rlt(L: jax.Array, B: jax.Array) -> jax.Array:
+    """X such that X @ L^T = B  (right / lower / transpose / non-unit)."""
+    # L Y = B^T  ->  X = Y^T
+    y = jax.lax.linalg.triangular_solve(L, B.T, left_side=True, lower=True)
+    return y.T
+
+
+def ref_potrf(a: jax.Array) -> jax.Array:
+    return jnp.linalg.cholesky(a)
+
+
+def ref_factor_panel(p: jax.Array, w: int) -> jax.Array:
+    """Oracle for the fused supernode panel factorization.
+    Panels carry only the lower triangle -> no input symmetrization."""
+    ld = jax.lax.linalg.cholesky(p[:w, :w], symmetrize_input=False)
+    top = jnp.where(
+        jnp.arange(w)[:, None] >= jnp.arange(w)[None, :], ld, 0
+    )
+    if p.shape[0] > w:
+        bottom = ref_trsm_rlt(ld, p[w:])
+        return jnp.concatenate([top, bottom], axis=0)
+    return top

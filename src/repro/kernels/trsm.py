@@ -1,0 +1,125 @@
+"""Pallas TRSM kernel:  X = B @ L^{-T}  (right side, lower, transposed —
+exactly the DTRSM the factorization applies to a supernode's rectangular
+part after DPOTRF).
+
+TPU adaptation (MAGMA-style): a triangular solve is a terrible fit for the
+MXU, so the nb x nb diagonal blocks of L are inverted *outside* the kernel
+(tiny XLA triangular solves) and the kernel itself performs only matmuls:
+
+    X_0 = B_0 @ invD_0^T
+    X_j = (B_j - sum_{i<j} X_i @ L[j, i]^T) @ invD_j^T
+
+The j-loop is sequential at the wrapper level (at most W/nb <= 8 steps);
+each step is one Pallas call whose K-reduction runs over the already-solved
+prefix.  The subtraction and the invD application are fused into the last
+K-iteration of the kernel, so each step is a single VMEM-resident pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _first_step_kernel(b_ref, invd_ref, x_ref):
+    x_ref[...] = jnp.dot(
+        b_ref[...], invd_ref[...].T, preferred_element_type=x_ref.dtype
+    )
+
+
+def _step_kernel(b_ref, xp_ref, lrow_ref, invd_ref, x_ref):
+    k = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(k == 0)
+    def _init():
+        x_ref[...] = jnp.zeros_like(x_ref)
+
+    x_ref[...] += jnp.dot(
+        xp_ref[...], lrow_ref[...].T, preferred_element_type=x_ref.dtype
+    )
+
+    @pl.when(k == nk - 1)
+    def _solve():
+        x_ref[...] = jnp.dot(
+            b_ref[...] - x_ref[...], invd_ref[...].T,
+            preferred_element_type=x_ref.dtype,
+        )
+
+
+def _invert_diag_blocks(L: jax.Array, nb: int) -> jax.Array:
+    """Invert the nb x nb diagonal blocks of lower-triangular L (host/XLA side;
+    MAGMA does the same with a batched inversion before its GEMM-only trsm)."""
+    W = L.shape[0]
+    nblk = W // nb
+    tiles = jnp.stack([L[i * nb:(i + 1) * nb, i * nb:(i + 1) * nb] for i in range(nblk)])
+    eye = jnp.broadcast_to(jnp.eye(nb, dtype=L.dtype), tiles.shape)
+    inv = jax.lax.linalg.triangular_solve(
+        tiles, eye, left_side=True, lower=True, transpose_a=False
+    )
+    return inv  # (nblk, nb, nb)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "nb", "interpret"))
+def trsm_rlt(
+    L: jax.Array,
+    B: jax.Array,
+    *,
+    block_m: int = 128,
+    nb: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Solve X @ L^T = B for X.  L: (W, W) lower-triangular, B: (M, W).
+    M and W must be multiples of block_m / nb (ops.py pads; padded columns of
+    L must carry identity on the diagonal)."""
+    M, W = B.shape
+    assert L.shape == (W, W)
+    assert M % block_m == 0 and W % nb == 0, ((M, W), (block_m, nb))
+    nblk = W // nb
+    invd = _invert_diag_blocks(L, nb)
+
+    kw = {}
+    if not interpret:
+        kw["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        )
+
+    cols = []
+    for j in range(nblk):
+        Bj = B[:, j * nb:(j + 1) * nb]
+        if j == 0:
+            xj = pl.pallas_call(
+                _first_step_kernel,
+                grid=(M // block_m,),
+                in_specs=[
+                    pl.BlockSpec((block_m, nb), lambda m: (m, 0)),
+                    pl.BlockSpec((nb, nb), lambda m: (0, 0)),
+                ],
+                out_specs=pl.BlockSpec((block_m, nb), lambda m: (m, 0)),
+                out_shape=jax.ShapeDtypeStruct((M, nb), B.dtype),
+                interpret=interpret,
+                **({} if interpret else {"compiler_params": pltpu.CompilerParams(
+                    dimension_semantics=("parallel",))}),
+            )(Bj, invd[0])
+        else:
+            Xp = jnp.concatenate(cols, axis=1)          # (M, j*nb) solved prefix
+            Lrow = L[j * nb:(j + 1) * nb, : j * nb]     # (nb, j*nb)
+            xj = pl.pallas_call(
+                _step_kernel,
+                grid=(M // block_m, j),
+                in_specs=[
+                    pl.BlockSpec((block_m, nb), lambda m, k: (m, 0)),
+                    pl.BlockSpec((block_m, nb), lambda m, k: (m, k)),
+                    pl.BlockSpec((nb, nb), lambda m, k: (0, k)),
+                    pl.BlockSpec((nb, nb), lambda m, k: (0, 0)),
+                ],
+                out_specs=pl.BlockSpec((block_m, nb), lambda m, k: (m, 0)),
+                out_shape=jax.ShapeDtypeStruct((M, nb), B.dtype),
+                interpret=interpret,
+                **kw,
+            )(Bj, Xp, Lrow, invd[j])
+        cols.append(xj)
+    return jnp.concatenate(cols, axis=1)

@@ -1,0 +1,1 @@
+"""Launcher: production mesh, step/sharding builders, dry-run, drivers."""

@@ -1,0 +1,137 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and record memory/cost/roofline analyses.
+
+MUST be run as its own process (the XLA flag above must precede any jax
+device initialization — hence the import-order violation at the top).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh multi
+
+Results are cached as JSON under benchmarks/results/dryrun/ so the sweep is
+resumable; EXPERIMENTS.md §Dry-run / §Roofline are generated from them.
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, cell_supported
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import model_flops_for, roofline
+from repro.launch.steps import build_cell, lower_cell
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *, force: bool = False,
+             rules: dict | None = None, tag: str = "", unroll: bool = False,
+             overrides: dict | None = None) -> dict:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out_path = RESULTS / f"{arch}__{shape}__{mesh_kind}{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    ok, why = cell_supported(arch, shape)
+    if not ok:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_kind, "skipped": why}
+        out_path.write_text(json.dumps(rec, indent=2))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind, "devices": int(n_dev)}
+    try:
+        cell = build_cell(arch, shape, mesh, rules=rules, unroll=unroll,
+                          overrides=overrides)
+        lowered = lower_cell(cell, mesh)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        print(f"[{arch} x {shape} x {mesh_kind}] memory_analysis: {mem}")
+        cost = compiled.cost_analysis()
+        print(f"[{arch} x {shape} x {mesh_kind}] flops/dev={cost.get('flops', 0):.3e} "
+              f"bytes/dev={cost.get('bytes accessed', 0):.3e}")
+        hlo = compiled.as_text()
+        spec = SHAPES[shape]
+        rf = roofline(compiled, hlo, n_dev, cfg=cell.cfg, spec=spec,
+                      kind=cell.kind,
+                      model_flops=model_flops_for(cell.cfg, spec, cell.kind))
+        rec.update({
+            "ok": True,
+            "lower_s": t1 - t0,
+            "compile_s": t2 - t1,
+            "n_params": cell.cfg.n_params(),
+            "n_active_params": cell.cfg.n_active_params(),
+            "roofline": rf,
+        })
+    except Exception as e:
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+        print(f"[{arch} x {shape} x {mesh_kind}] FAILED: {e}")
+    rec["wall_s"] = time.time() - t0
+    out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="fully unroll layer loops (slow compiles; parser validation)")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.list:
+        for a in archs:
+            for s in shapes:
+                ok, why = cell_supported(a, s)
+                print(f"{a:24s} {s:12s} {'ok' if ok else 'SKIP: ' + why}")
+        return
+
+    if not (args.all or args.arch or args.shape):
+        ap.error("pass --all or --arch/--shape")
+
+    n_ok = n_fail = n_skip = 0
+    for mesh_kind in meshes:
+        for a in archs:
+            for s in shapes:
+                rec = run_cell(a, s, mesh_kind, force=args.force,
+                               unroll=args.unroll,
+                               tag="_unroll" if args.unroll else "")
+                if rec.get("skipped"):
+                    n_skip += 1
+                elif rec.get("ok"):
+                    n_ok += 1
+                    rf = rec["roofline"]
+                    print(f"OK  {a:24s} {s:12s} {mesh_kind:6s} "
+                          f"bound={rf['bound']:10s} "
+                          f"t=({rf['t_compute_s']:.2e},{rf['t_memory_s']:.2e},"
+                          f"{rf['t_collective_s']:.2e})s "
+                          f"compile={rec.get('compile_s', 0):.0f}s")
+                else:
+                    n_fail += 1
+    print(f"\ndry-run: {n_ok} ok, {n_fail} failed, {n_skip} skipped")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Single pod: 16 x 16 = 256 chips, axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model); the pod axis
+extends data parallelism across the (slower) cross-pod links, so gradient
+all-reduce is the only traffic that crosses pods in the training layout.
+
+Defined as a function (not a module-level constant) so importing this module
+never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(shape: tuple[int, ...] = (1, 1), axes: tuple[str, ...] = ("data", "model")):
+    """Tiny mesh over the locally available devices (smoke tests / examples)."""
+    n = 1
+    for s in shape:
+        n *= s
+    avail = len(jax.devices())
+    assert n <= avail, f"mesh {shape} needs {n} devices, have {avail}"
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+# Hardware model (TPU v5e-like, per chip) used by the roofline analysis.
+HW = {
+    "peak_flops": 197e12,   # bf16
+    "hbm_bw": 819e9,        # bytes/s
+    "ici_bw": 50e9,         # bytes/s per link
+    "hbm_per_chip": 16e9,   # bytes
+}

@@ -1,0 +1,122 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+"""Hillclimb driver: compile one cell (optionally with config/rule
+overrides), print the roofline terms and the top collectives with their JAX
+op provenance.  This is the 'profile' of the dry-run world.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch dbrx-132b --shape train_4k \
+        [--mesh single] [--override remat=dots] [--rule kv_heads=model] [--tag x]
+
+Each run appends a record to benchmarks/results/perf_log.jsonl so the
+hypothesis -> change -> measure loop in EXPERIMENTS.md §Perf is replayable.
+"""
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+
+from repro.configs import SHAPES
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import model_flops_for, roofline
+from repro.launch.steps import build_cell, lower_cell
+
+LOG = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "perf_log.jsonl"
+
+
+def _parse_kv(items):
+    out = {}
+    for it in items or []:
+        k, v = it.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    if "," in v or v == "None":
+                        v = None if v == "None" else tuple(x for x in v.split(",") if x)
+        out[k] = v
+    return out
+
+
+def run(arch: str, shape: str, mesh_kind: str = "single", *,
+        overrides=None, rules=None, tag: str = "", quiet: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    if rules:  # merge on top of the shape's default rules
+        from repro.launch.steps import SHAPE_RULES
+        merged = dict(SHAPE_RULES.get(shape, {}))
+        merged.update(rules)
+        rules = merged
+    cell = build_cell(arch, shape, mesh, unroll=False,
+                      overrides=overrides or None, rules=rules)
+    lowered = lower_cell(cell, mesh)
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    hlo = compiled.as_text()
+    spec = SHAPES[shape]
+    rf = roofline(compiled, hlo, n_dev, cfg=cell.cfg, spec=spec, kind=cell.kind,
+                  model_flops=model_flops_for(cell.cfg, spec, cell.kind))
+    parsed = analyze_hlo(hlo, n_dev)
+    top = parsed.top_collectives(15)
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind, "tag": tag,
+        "overrides": {k: str(v) for k, v in (overrides or {}).items()},
+        "rules": {k: str(v) for k, v in (rules or {}).items()},
+        "compile_s": compile_s,
+        "t_compute_s": rf["t_compute_s"], "t_memory_s": rf["t_memory_s"],
+        "t_collective_s": rf["t_collective_s"], "bound": rf["bound"],
+        "mfu_at_roofline": rf.get("mfu_at_roofline"),
+        "model_vs_hlo_flops": rf.get("model_vs_hlo_flops"),
+        "flops_per_device": rf["flops_per_device"],
+        "collective_wire_bytes_per_device": rf["collective_wire_bytes_per_device"],
+        "memory_fits_16g": rf["memory_analysis"].get("fits_16g"),
+        "memory_total_bytes": rf["memory_analysis"].get("total_nonaliased_bytes"),
+        "top_collectives": top,
+    }
+    LOG.parent.mkdir(parents=True, exist_ok=True)
+    with LOG.open("a") as f:
+        f.write(json.dumps(rec) + "\n")
+    if not quiet:
+        print(f"\n== {arch} x {shape} x {mesh_kind}  tag={tag or '-'} "
+              f"(compile {compile_s:.0f}s)")
+        print(f" bound={rf['bound']}  t_compute={rf['t_compute_s']:.3f}s "
+              f"t_memory={rf['t_memory_s']:.3f}s t_coll={rf['t_collective_s']:.3f}s")
+        print(f" mfu_at_roofline={rf.get('mfu_at_roofline', 0):.4f}  "
+              f"model/hlo={rf.get('model_vs_hlo_flops', 0):.3f}  "
+              f"fits16g={rec['memory_fits_16g']}")
+        print(" top collectives (trip-weighted wire bytes/device):")
+        for r in top[:12]:
+            print(f"  {r['wire_bytes'] / 1e9:8.2f} GB  x{r['count']:<6.0f} "
+                  f"{r['kind']:<18s} {r['shape']:<22s} ...{r['op'][-70:]}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--override", action="append", default=[],
+                    help="ModelConfig field override, e.g. remat=dots")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="sharding rule override, e.g. kv_heads=model")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    run(args.arch, args.shape, args.mesh,
+        overrides=_parse_kv(args.override) or None,
+        rules=_parse_kv(args.rule) or None, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs_per_device        / peak_FLOP/s
+    memory term     = HBM_bytes_per_device        / HBM_bw
+    collective term = collective_wire_bytes/dev   / link_bw
+
+Sources:
+  * FLOPs + collective bytes: the trip-aware HLO call-graph parser
+    (repro.launch.hlo_analysis) over compiled.as_text().  XLA's own
+    cost_analysis() counts while-loop bodies once — an L-layer scan would be
+    undercounted ~L x — so the parser multiplies loop bodies by their trip
+    counts.  (Validated against fully-unrolled compiles; see EXPERIMENTS.md.)
+  * memory term: an analytic HBM-traffic model (params/grads/optimizer
+    state/activation checkpoints/KV cache/logits).  The CPU backend's
+    "bytes accessed" counts every unfused op's operands — CPU fusion is far
+    weaker than TPU fusion, inflating byte traffic ~10-30x — so it is
+    recorded as a diagnostic only.
+  * memory_analysis(): per-device allocation footprint (proves it fits).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import HW
+
+
+# ---------------------------------------------------------------------------
+# analytic HBM-traffic model (per device, bytes)
+# ---------------------------------------------------------------------------
+def analytic_hbm_bytes(cfg, spec, kind: str, n_devices: int) -> float:
+    """First-principles HBM traffic for one step, assuming TPU-grade fusion:
+    weights are read once per pass, activations spill only at layer
+    boundaries (remat checkpoints), attention/CE are flash/chunk-fused."""
+    P = cfg.n_params()
+    P_active = cfg.n_active_params()
+    B, S = spec.batch, spec.seq
+    d = cfg.d_model
+    L = cfg.n_layers
+    dt = 2  # bf16
+
+    if kind == "train":
+        tokens_loc = B * S / n_devices
+        p_loc = P / n_devices          # params fully sharded (FSDP x TP)
+        # fwd read + remat recompute read + bwd read (transposed use)
+        w_traffic = 3 * p_loc * dt
+        # grads write+read (bf16), optimizer m/v read+write (f32 or int8), update
+        g_traffic = 2 * p_loc * dt
+        opt_bytes = 1.25 if P > 15e9 else 8.0   # int8 v (+scales) vs f32 m+v
+        o_traffic = p_loc * (2 * 4 + 2 * opt_bytes)  # m rw + v rw
+        # activation checkpoints: save + 2 reads per layer boundary
+        act = 3 * L * tokens_loc * d * dt
+        # CE logits (chunked, f32, vocab sharded over 'model'): w+r, fwd+bwd
+        ce = 4 * tokens_loc * (cfg.vocab / min(n_devices, 16)) * 4
+        return w_traffic + g_traffic + o_traffic + act + ce
+
+    if kind == "prefill":
+        tokens_loc = B * S / n_devices
+        p_loc = P_active / n_devices
+        act = L * tokens_loc * d * dt           # layer-boundary writes
+        cache = _cache_bytes(cfg, B, S) / n_devices
+        return p_loc * dt + act + cache
+
+    # decode: weights + full cache read per token
+    p_loc = P_active / n_devices * dt
+    cache = _cache_bytes(cfg, B, S) / n_devices
+    return p_loc + cache
+
+
+def _cache_bytes(cfg, B: int, S: int) -> float:
+    total = 0.0
+    for i in range(cfg.n_layers):
+        if cfg.layer_kind(i) == "attn":
+            if cfg.mla:
+                per_tok = cfg.kv_lora_rank + cfg.qk_rope_dim
+            else:
+                per_tok = 2 * cfg.n_kv_heads * cfg.head_dim
+            total += B * S * per_tok * 2
+        else:
+            total += B * (cfg.ssm_heads * cfg.ssm_state * cfg.ssm_headdim * 4
+                          + (cfg.ssm_conv - 1) * (cfg.d_inner + 2 * cfg.ssm_state) * 2)
+    return total
+
+
+def roofline(compiled, hlo_text: str, n_devices: int, *,
+             cfg=None, spec=None, kind: str | None = None,
+             model_flops: float | None = None) -> dict:
+    cost = compiled.cost_analysis()
+    parsed = analyze_hlo(hlo_text, n_devices)
+    flops_dev = parsed.flops
+    bytes_dev_raw = float(cost.get("bytes accessed", 0.0))
+    bytes_dev = (analytic_hbm_bytes(cfg, spec, kind, n_devices)
+                 if cfg is not None else bytes_dev_raw)
+
+    t_compute = flops_dev / HW["peak_flops"]
+    t_memory = bytes_dev / HW["hbm_bw"]
+    t_coll = parsed.coll_wire_bytes / HW["ici_bw"]
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bound = max(terms, key=terms.get)
+    t_bound = terms[bound]
+    out = {
+        "flops_per_device": flops_dev,
+        "flops_per_device_xla_raw": float(cost.get("flops", 0.0)),
+        "hbm_bytes_per_device_analytic": bytes_dev,
+        "hbm_bytes_per_device_xla_raw": bytes_dev_raw,
+        "collective_wire_bytes_per_device": parsed.coll_wire_bytes,
+        "collective_counts": parsed.coll_counts,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bound": bound,
+        "roofline_step_s": t_bound,
+        "compute_fraction_of_bound": (t_compute / t_bound) if t_bound > 0 else 0.0,
+    }
+    if model_flops is not None:
+        out["model_flops_global"] = model_flops
+        hlo_global = flops_dev * n_devices
+        out["model_vs_hlo_flops"] = model_flops / hlo_global if hlo_global else 0.0
+        out["mfu_at_roofline"] = (
+            model_flops / (t_bound * n_devices * HW["peak_flops"]) if t_bound > 0 else 0.0
+        )
+    try:
+        mem = compiled.memory_analysis()
+        total = int(mem.argument_size_in_bytes + mem.output_size_in_bytes
+                    + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+        out["memory_analysis"] = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "total_nonaliased_bytes": total,
+            "fits_16g": total < HW["hbm_per_chip"],
+        }
+    except Exception as e:  # pragma: no cover
+        out["memory_analysis"] = {"error": str(e)}
+    return out
+
+
+def model_flops_for(cfg, shape_spec, kind: str) -> float:
+    """MODEL_FLOPS: 6*N*D for training (N = active params, D = tokens);
+    2*N*D for inference forward."""
+    n_active = cfg.n_active_params()
+    tokens = shape_spec.batch * (shape_spec.seq if kind != "decode" else 1)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens

@@ -1,0 +1,210 @@
+"""Cell builders: (architecture x input-shape x mesh) -> jit-able step
+function + fully-specified input shardings + ShapeDtypeStruct inputs.
+
+The same builders serve the dry-run (lower+compile only) and the real
+drivers (train.py / serve.py), so what we dry-run is exactly what runs.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, get_smoke_config, input_specs
+from repro.models import common as mcommon
+from repro.models.common import ModelConfig, set_active_mesh, set_mesh_rules
+from repro.models.model import (
+    LanguageModel,
+    build_segments,
+    cache_axes,
+    init_cache,
+)
+from repro.optim import AdamW
+
+
+# per-shape sharding-rule overrides (see DESIGN.md §Sharding)
+SHAPE_RULES = {
+    "train_4k": {},
+    "prefill_32k": {},
+    "decode_32k": {"seq_kv": "model"},
+    "long_500k": {"batch": None, "seq_kv": ("pod", "data", "model")},
+}
+
+
+def shardings_from_axes(mesh, shapes_tree, axes_tree):
+    """Map a logical-axes tree (tuple leaves) onto NamedShardings.
+
+    jit in_shardings require exact divisibility (unlike sharding
+    constraints), so any dim not divisible by its assigned mesh axes is
+    dropped to replicated (e.g. mamba2's vocab 50280 over 16)."""
+    flat_s, tdef = jax.tree.flatten(shapes_tree)
+    flat_a = tdef.flatten_up_to(axes_tree)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for s, a in zip(flat_s, flat_a):
+        ns = mcommon.logical_sharding(tuple(a), mesh)
+        spec = list(ns.spec)
+        shape = getattr(s, "shape", ())
+        spec = spec + [None] * (len(shape) - len(spec))
+        fixed = []
+        for dim, sp in zip(shape, spec):
+            if sp is None:
+                fixed.append(None)
+                continue
+            axes_ = sp if isinstance(sp, tuple) else (sp,)
+            total = 1
+            for ax in axes_:
+                total *= sizes.get(ax, 1)
+            fixed.append(sp if dim % total == 0 else None)
+        out.append(jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(*fixed)))
+    return tdef.unflatten(out)
+
+
+def batch_axes(cfg: ModelConfig, shape: str) -> dict:
+    spec = SHAPES[shape]
+    if spec.kind == "train":
+        ax = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        if cfg.frontend_tokens:
+            ax["frontend"] = ("batch", None, "act_embed")
+        return ax
+    if spec.kind == "prefill":
+        ax = {"tokens": ("batch", "seq")}
+        if cfg.frontend_tokens:
+            ax["frontend"] = ("batch", None, "act_embed")
+        return ax
+    return {"tokens": ("batch", None), "cache_len": ()}
+
+
+def cache_axes_tree(cfg: ModelConfig) -> list:
+    """Axes tree mirroring init_cache structure (leading stack axis -> None)."""
+    out = []
+    for pattern, _r in build_segments(cfg):
+        seg = {}
+        for si, spec in enumerate(pattern):
+            one = cache_axes(cfg, spec)
+            seg[f"slot{si}"] = jax.tree.map(
+                lambda ax: (None,) + tuple(ax), one,
+                is_leaf=lambda x: isinstance(x, tuple),
+            )
+        out.append(seg)
+    return out
+
+
+def pick_optimizer(cfg: ModelConfig) -> AdamW:
+    # int8 second moment for >15B-param models: the difference between
+    # fitting and not fitting optimizer state in HBM at this mesh size.
+    big = cfg.n_params() > 15e9
+    return AdamW(lr=3e-4, quantize_v=big)
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    cfg: ModelConfig
+    step: Any                 # python callable (jit target)
+    args: tuple               # ShapeDtypeStructs
+    in_shardings: tuple
+    donate_argnums: tuple
+    kind: str
+    rules: dict | None = None
+
+
+def build_cell(arch: str, shape: str, mesh, *, smoke: bool = False,
+               rules: dict | None = None, unroll: bool = True,
+               overrides: dict | None = None) -> Cell:
+    import dataclasses as _dc
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    if unroll:
+        cfg = _dc.replace(cfg, unroll=True)
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    spec = SHAPES[shape]
+    if rules is None:
+        rules = dict(SHAPE_RULES.get(shape, {}))
+    set_mesh_rules(rules)
+    set_active_mesh(mesh)
+
+    model = LanguageModel(cfg)
+    key = jax.random.PRNGKey(0)
+    param_shapes = jax.eval_shape(model.init, key)
+    param_axes = model.param_axes()
+    param_sh = shardings_from_axes(mesh, param_shapes, param_axes)
+    batch_sh_axes = batch_axes(cfg, shape)
+    ins = input_specs(cfg, shape)
+
+    if spec.kind == "train":
+        opt = pick_optimizer(cfg)
+        opt_shapes = jax.eval_shape(opt.init, param_shapes)
+        opt_sh = shardings_from_axes(mesh, opt_shapes, opt.state_axes(param_axes))
+        batch_sh = shardings_from_axes(mesh, ins, batch_sh_axes)
+
+        def step(params, opt_state, batch):
+            def loss_fn(p):
+                return model.loss(p, batch["tokens"], batch["labels"],
+                                  frontend=batch.get("frontend"))
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            # pin gradients to the parameter shardings: without this the
+            # partitioner is free to materialize full-size all-reduced grads
+            # (observed: +3 GB/layer wire on granite); with it they become
+            # reduce-scatters into the FSDP shards.
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                grads, param_sh)
+            params2, opt2 = opt.update(params, grads, opt_state)
+            return params2, opt2, {"loss": loss, **metrics}
+
+        return Cell(arch, shape, cfg, step,
+                    (param_shapes, opt_shapes, ins),
+                    (param_sh, opt_sh, batch_sh),
+                    donate_argnums=(0, 1), kind="train", rules=rules)
+
+    if spec.kind == "prefill":
+        cache_shapes = jax.eval_shape(
+            lambda: init_cache(cfg, spec.batch, spec.seq, cfg.compute_dtype))
+        cache_sh = shardings_from_axes(mesh, cache_shapes, cache_axes_tree(cfg))
+        batch_sh = shardings_from_axes(mesh, ins, batch_sh_axes)
+
+        def step(params, batch, caches):
+            return model.prefill(params, batch["tokens"], caches,
+                                 frontend=batch.get("frontend"))
+
+        return Cell(arch, shape, cfg, step,
+                    (param_shapes, ins, cache_shapes),
+                    (param_sh, batch_sh, cache_sh),
+                    donate_argnums=(2,), kind="prefill", rules=rules)
+
+    # decode: one new token against a cache of spec.seq positions
+    cache_shapes = jax.eval_shape(
+        lambda: init_cache(cfg, spec.batch, spec.seq, cfg.compute_dtype))
+    cache_sh = shardings_from_axes(mesh, cache_shapes, cache_axes_tree(cfg))
+    tok = ins["tokens"]
+    clen = ins["cache_len"]
+    tok_sh = mcommon.logical_sharding(("batch", None), mesh)
+    clen_sh = NamedSharding(mesh, P())
+
+    def step(params, token, caches, cache_len):
+        return model.decode_step(params, token, caches, cache_len)
+
+    return Cell(arch, shape, cfg, step,
+                (param_shapes, tok, cache_shapes, clen),
+                (param_sh, tok_sh, cache_sh, clen_sh),
+                donate_argnums=(2,), kind="decode", rules=rules)
+
+
+def lower_cell(cell: Cell, mesh):
+    """jit + lower (no compile)."""
+    set_mesh_rules(cell.rules or {})
+    set_active_mesh(mesh)
+    jitted = jax.jit(
+        cell.step,
+        in_shardings=cell.in_shardings,
+        donate_argnums=cell.donate_argnums,
+    )
+    with mesh:
+        lowered = jitted.lower(*cell.args)
+    return lowered

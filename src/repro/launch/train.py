@@ -1,0 +1,192 @@
+"""Training driver with checkpoint/restart, preemption handling and a
+straggler watchdog.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+        --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+
+Fault-tolerance model (single-process CPU here; the same hooks fire per-host
+under multi-controller jax.distributed at real scale):
+  * SIGTERM/SIGINT -> finish the current step, checkpoint, exit 42 (the
+    cluster scheduler restarts the job, which auto-resumes from the latest
+    checkpoint — exercised by tests/test_fault_tolerance.py);
+  * periodic + async checkpoints (snapshot sync, write in background);
+  * a watchdog thread logs a warning if a step exceeds `watchdog_factor` x
+    the trailing median step time (straggler detection; at scale this feeds
+    the controller that evicts slow hosts).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import signal
+import statistics
+import sys
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.configs import get_config, get_smoke_config
+from repro.data import make_train_iterator
+from repro.launch.mesh import make_host_mesh
+from repro.models import LanguageModel, set_active_mesh, set_mesh_rules
+from repro.launch.steps import shardings_from_axes
+from repro.optim import AdamW, cosine_schedule
+
+
+class StepWatchdog:
+    """Logs stragglers: steps slower than factor x trailing median."""
+
+    def __init__(self, factor: float = 3.0, window: int = 20):
+        self.factor = factor
+        self.times: list[float] = []
+        self.window = window
+        self.warnings = 0
+
+    def observe(self, dt: float) -> bool:
+        slow = False
+        if len(self.times) >= 5:
+            med = statistics.median(self.times[-self.window:])
+            if dt > self.factor * med:
+                self.warnings += 1
+                slow = True
+                print(f"[watchdog] straggler step: {dt:.3f}s vs median {med:.3f}s",
+                      flush=True)
+        self.times.append(dt)
+        return slow
+
+
+def train(
+    arch: str = "llama3.2-1b",
+    *,
+    smoke: bool = True,
+    steps: int = 100,
+    batch: int = 8,
+    seq: int = 256,
+    lr: float = 3e-4,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 50,
+    mesh_shape: tuple[int, int] = (1, 1),
+    log_every: int = 10,
+    seed: int = 0,
+    grad_compression: bool = False,
+    on_step=None,
+) -> dict:
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    cfg = dataclasses.replace(cfg, param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    mesh = make_host_mesh(mesh_shape)
+    set_mesh_rules({})
+    set_active_mesh(mesh)
+
+    model = LanguageModel(cfg)
+    opt = AdamW(lr=cosine_schedule(lr, warmup=max(steps // 20, 1), total=steps))
+
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = opt.init(params)
+    start = 0
+
+    param_sh = shardings_from_axes(mesh, jax.eval_shape(lambda: params), model.param_axes())
+    opt_sh = shardings_from_axes(
+        mesh, jax.eval_shape(lambda: opt_state), opt.state_axes(model.param_axes()))
+
+    ckpt = None
+    if ckpt_dir:
+        ckpt = AsyncCheckpointer(ckpt_dir)
+        last = latest_step(ckpt_dir)
+        if last is not None:
+            state = restore_checkpoint(
+                ckpt_dir, last, {"params": params, "opt": opt_state},
+                shardings={"params": param_sh, "opt": opt_sh})
+            params, opt_state = state["params"], state["opt"]
+            start = last
+            print(f"[train] resumed from step {last}", flush=True)
+
+    from repro.models.model import train_step_fn  # uses optimizer.update
+    step_fn = jax.jit(train_step_fn(cfg, opt), donate_argnums=(0, 1))
+
+    # preemption: finish the step, checkpoint, exit 42
+    preempted = threading.Event()
+
+    def _sig(_s, _f):
+        print("[train] preemption signal received", flush=True)
+        preempted.set()
+
+    old_term = signal.signal(signal.SIGTERM, _sig)
+    old_int = signal.signal(signal.SIGINT, _sig)
+
+    wd = StepWatchdog()
+    it = make_train_iterator(cfg.vocab, seq, batch, seed=seed, start_step=start)
+    losses = []
+    log_path = pathlib.Path(ckpt_dir) / "metrics.jsonl" if ckpt_dir else None
+    try:
+        for step, hostbatch in it:
+            if step >= steps:
+                break
+            t0 = time.time()
+            b = {k: jnp.asarray(v) for k, v in hostbatch.items()}
+            params, opt_state, metrics = step_fn(params, opt_state, b)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            wd.observe(dt)
+            losses.append(loss)
+            if on_step:
+                on_step(step, loss)
+            if step % log_every == 0:
+                print(f"[train] step {step:5d} loss {loss:.4f} ({dt:.3f}s)", flush=True)
+                if log_path:
+                    with log_path.open("a") as f:
+                        f.write(json.dumps({"step": step, "loss": loss, "dt": dt}) + "\n")
+            if ckpt and (step + 1) % ckpt_every == 0:
+                ckpt.save(step + 1, {"params": params, "opt": opt_state})
+            if preempted.is_set():
+                if ckpt:
+                    ckpt.save(step + 1, {"params": params, "opt": opt_state})
+                    ckpt.wait()
+                print(f"[train] checkpointed at step {step + 1}, exiting for restart",
+                      flush=True)
+                return {"final_loss": losses[-1], "steps_done": step + 1,
+                        "preempted": True, "losses": losses}
+        if ckpt:
+            ckpt.save(min(steps, start + len(losses)) if losses else steps,
+                      {"params": params, "opt": opt_state})
+            ckpt.wait()
+    finally:
+        signal.signal(signal.SIGTERM, old_term)
+        signal.signal(signal.SIGINT, old_int)
+    return {
+        "final_loss": losses[-1] if losses else float("nan"),
+        "first_loss": losses[0] if losses else float("nan"),
+        "steps_done": start + len(losses),
+        "preempted": False,
+        "losses": losses,
+        "straggler_warnings": wd.warnings,
+        "params": params,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--full", action="store_true", help="full config (not smoke)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+    out = train(args.arch, smoke=not args.full, steps=args.steps,
+                batch=args.batch, seq=args.seq, lr=args.lr,
+                ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    print(f"[train] done: first={out['first_loss']:.4f} final={out['final_loss']:.4f}")
+    if out.get("preempted"):
+        sys.exit(42)
+
+
+if __name__ == "__main__":
+    main()

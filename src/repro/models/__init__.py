@@ -1,0 +1,25 @@
+"""Model substrate: decoder-only LM families (dense GQA/MQA, MLA, MoE, SSM,
+hybrid) assembled from shared building blocks, with logical-axis sharding."""
+from repro.models.common import (
+    ModelConfig,
+    Mesh_Rules,
+    logical_sharding,
+    set_mesh_rules,
+    set_active_mesh,
+    active_mesh,
+)
+from repro.models.model import (
+    LanguageModel,
+    init_params,
+    init_cache,
+    train_step_fn,
+    prefill_step_fn,
+    decode_step_fn,
+)
+
+__all__ = [
+    "ModelConfig", "Mesh_Rules", "logical_sharding", "set_mesh_rules",
+    "set_active_mesh", "active_mesh",
+    "LanguageModel", "init_params", "init_cache", "train_step_fn",
+    "prefill_step_fn", "decode_step_fn",
+]

@@ -1,0 +1,245 @@
+"""Attention mixers: GQA/MQA/MHA and MLA (deepseek), with causal chunked
+prefill (exact triangular FLOPs, bounded memory) and single-token decode
+against a KV cache.
+
+Chunking: the query axis is processed in static chunks; chunk i attends to
+keys [0, (i+1)*chunk) with one matmul.  The loop is a *python* loop over
+static slices, so the lowered HLO contains only the triangular work — no
+masked-away FLOPs — while peak memory is one chunk's logits.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, rope, shard
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, T, Hkv, hd)   — GQA;  MLA: c_kv (B, T, kv_lora)
+    v: jax.Array  # (B, T, Hkv, hd)   — GQA;  MLA: k_rope (B, T, rope_dim)
+    length: jax.Array  # () int32: number of valid positions
+
+
+def _sdpa_chunked(q, k, v, n_kv_groups: int, q_chunk: int, scale: float):
+    """Causal attention, q: (B,S,H,hd), k/v: (B,S,Hkv,hd).  Exact-FLOP
+    chunking: python loop over static q-chunks."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    q = q.reshape(B, S, Hkv, n_kv_groups, hd)
+    nchunk = max(1, S // q_chunk)
+    cq = S // nchunk
+    outs = []
+    for i in range(nchunk):
+        qi = q[:, i * cq:(i + 1) * cq]                 # (B,cq,Hkv,G,hd)
+        kv_hi = (i + 1) * cq
+        ki = k[:, :kv_hi]                              # (B,T,Hkv,hd)
+        vi = v[:, :kv_hi]
+        logits = jnp.einsum("bqkgd,btkd->bkgqt", qi, ki).astype(jnp.float32) * scale
+        # causal mask inside the diagonal block
+        qpos = i * cq + jnp.arange(cq)
+        kpos = jnp.arange(kv_hi)
+        mask = qpos[:, None] >= kpos[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        outs.append(jnp.einsum("bkgqt,btkd->bqkgd", w, vi))
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out.reshape(B, S, H, v.shape[-1])  # v dim may differ from qk dim (MLA)
+
+
+def _sdpa_decode(q, k, v, n_kv_groups: int, scale: float, length):
+    """q: (B,1,H,hd) against cache k/v: (B,T,Hkv,hd).
+    length: scalar or (B,) valid-prefix length(s)."""
+    B, _, H, hd = q.shape
+    Hkv = k.shape[2]
+    T = k.shape[1]
+    qg = q.reshape(B, Hkv, n_kv_groups, hd)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg, k).astype(jnp.float32) * scale
+    lv = jnp.broadcast_to(jnp.asarray(length), (B,))
+    valid = jnp.arange(T)[None, None, None, :] < lv[:, None, None, None]
+    logits = jnp.where(valid, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", w, v)
+    return out.reshape(B, 1, H, v.shape[-1])
+
+
+def _cache_write(cache_arr, new_vals, idx):
+    """Write new_vals (B, 1, ...) into cache_arr at position idx per batch.
+    idx scalar -> cheap dynamic_update_slice; idx (B,) -> scatter (serving)."""
+    idx = jnp.asarray(idx)
+    if idx.ndim == 0:
+        zero = jnp.zeros((), idx.dtype)  # indices must share one dtype
+        start = (zero, idx) + (zero,) * (cache_arr.ndim - 2)
+        return jax.lax.dynamic_update_slice(
+            cache_arr, new_vals.astype(cache_arr.dtype), start)
+    B = cache_arr.shape[0]
+    return cache_arr.at[jnp.arange(B), idx].set(
+        new_vals[:, 0].astype(cache_arr.dtype))
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+def gqa_params(cfg: ModelConfig, key) -> dict:
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    so = 1.0 / math.sqrt(H * hd)
+    return {
+        "wq": (jax.random.normal(k1, (d, H * hd)) * s).astype(cfg.param_dtype),
+        "wk": (jax.random.normal(k2, (d, Hkv * hd)) * s).astype(cfg.param_dtype),
+        "wv": (jax.random.normal(k3, (d, Hkv * hd)) * s).astype(cfg.param_dtype),
+        "wo": (jax.random.normal(k4, (H * hd, d)) * so).astype(cfg.param_dtype),
+    }
+
+
+def gqa_axes() -> dict:
+    return {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "kv_heads"),
+        "wv": ("embed", "kv_heads"),
+        "wo": ("heads", "embed"),
+    }
+
+
+def gqa_forward(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,                      # (B, S, d)
+    positions: jax.Array,              # (B, S)
+    cache: KVCache | None = None,      # decode if not None
+) -> tuple[jax.Array, KVCache | None]:
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.dot(x, p["wq"]).reshape(B, S, H, hd)
+    k = jnp.dot(x, p["wk"]).reshape(B, S, Hkv, hd)
+    v = jnp.dot(x, p["wv"]).reshape(B, S, Hkv, hd)
+    q = shard(q, "batch", "seq", "heads", None)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    scale = 1.0 / math.sqrt(hd)
+    groups = H // Hkv
+    if cache is None:
+        out = _sdpa_chunked(q, k, v, groups, cfg.q_chunk, scale)
+        new_cache = None
+    elif S == 1:
+        # decode: append to cache, attend over the valid prefix
+        ck = _cache_write(cache.k, k, cache.length)
+        cv = _cache_write(cache.v, v, cache.length)
+        new_cache = KVCache(ck, cv, cache.length + 1)
+        out = _sdpa_decode(q, ck, cv, groups, scale, cache.length + 1)
+    else:
+        # prefill into an empty cache
+        ck = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0))
+        new_cache = KVCache(ck, cv, cache.length + S)
+        out = _sdpa_chunked(q, k, v, groups, cfg.q_chunk, scale)
+    out = out.reshape(B, S, H * hd)
+    return jnp.dot(out, p["wo"]), new_cache
+
+
+def gqa_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3): low-rank compressed q/kv, latent KV cache, absorbed decode
+# ---------------------------------------------------------------------------
+def mla_params(cfg: ModelConfig, key) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    s = lambda f: 1.0 / math.sqrt(f)
+    pd = cfg.param_dtype
+    return {
+        "wq_a": (jax.random.normal(ks[0], (d, r_q)) * s(d)).astype(pd),
+        "wq_b": (jax.random.normal(ks[1], (r_q, H * (dn + dr))) * s(r_q)).astype(pd),
+        "wkv_a": (jax.random.normal(ks[2], (d, r_kv + dr)) * s(d)).astype(pd),
+        "wk_b": (jax.random.normal(ks[3], (r_kv, H * dn)) * s(r_kv)).astype(pd),
+        "wv_b": (jax.random.normal(ks[4], (r_kv, H * dv)) * s(r_kv)).astype(pd),
+        "wo": (jax.random.normal(ks[5], (H * dv, d)) * s(H * dv)).astype(pd),
+    }
+
+
+def mla_axes() -> dict:
+    return {
+        "wq_a": ("embed", "lora"),
+        "wq_b": ("lora", "heads"),
+        "wkv_a": ("embed", "lora"),
+        "wk_b": ("lora", "heads"),
+        "wv_b": ("lora", "heads"),
+        "wo": ("heads", "embed"),
+    }
+
+
+def mla_forward(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: KVCache | None = None,
+) -> tuple[jax.Array, KVCache | None]:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r_kv = cfg.kv_lora_rank
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    q = jnp.dot(jnp.dot(x, p["wq_a"]), p["wq_b"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.dot(x, p["wkv_a"])                      # (B, S, r_kv + dr)
+    c_kv, k_rope = kv[..., :r_kv], kv[..., r_kv:]
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    if cache is None or S > 1:
+        # prefill / train: expand the latent into per-head K/V (standard path)
+        k_nope = jnp.dot(c_kv, p["wk_b"]).reshape(B, S, H, dn)
+        vv = jnp.dot(c_kv, p["wv_b"]).reshape(B, S, H, dv)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))], axis=-1
+        )
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = _sdpa_chunked(q_full, k_full, vv, 1, cfg.q_chunk, scale)
+        new_cache = None
+        if cache is not None:
+            ck = jax.lax.dynamic_update_slice(cache.k, c_kv.astype(cache.k.dtype), (0, 0, 0))
+            cr = jax.lax.dynamic_update_slice(cache.v, k_rope.astype(cache.v.dtype), (0, 0, 0))
+            new_cache = KVCache(ck, cr, cache.length + S)
+    else:
+        # absorbed decode: score/combine directly in the latent space
+        ck = _cache_write(cache.k, c_kv, cache.length)
+        cr = _cache_write(cache.v, k_rope, cache.length)
+        new_cache = KVCache(ck, cr, cache.length + 1)
+        T = ck.shape[1]
+        wk_b = p["wk_b"].reshape(r_kv, H, dn)
+        q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wk_b)      # (B,H,r_kv)
+        logits = jnp.einsum("bhr,btr->bht", q_lat, ck).astype(jnp.float32)
+        logits += jnp.einsum("bhd,btd->bht", q_rope[:, 0], cr).astype(jnp.float32)
+        logits *= scale
+        lv = jnp.broadcast_to(jnp.asarray(cache.length + 1), (B,))
+        valid = jnp.arange(T)[None, None, :] < lv[:, None, None]
+        logits = jnp.where(valid, logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        o_lat = jnp.einsum("bht,btr->bhr", w, ck)                   # (B,H,r_kv)
+        wv_b = p["wv_b"].reshape(r_kv, H, dv)
+        out = jnp.einsum("bhr,rhd->bhd", o_lat, wv_b)[:, None]      # (B,1,H,dv)
+    out = out.reshape(B, S, H * dv)
+    return jnp.dot(out, p["wo"]), new_cache
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        v=jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )

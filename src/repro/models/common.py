@@ -1,0 +1,320 @@
+"""Shared model substrate: config, logical-axis sharding, norms, RoPE,
+embeddings, chunked cross-entropy."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"          # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 512
+    vocab: int = 1024
+    act: str = "swiglu"            # swiglu | gelu
+    rope_theta: float = 500_000.0
+    norm_eps: float = 1e-5
+
+    # MoE
+    moe_experts: int = 0           # 0 = dense FFN everywhere
+    moe_top_k: int = 2
+    moe_d_ff: int = 0              # per-expert hidden (0 -> d_ff)
+    moe_shared_experts: int = 0    # deepseek shared expert(s)
+    moe_every: int = 1             # MoE FFN every k-th layer (jamba: 2)
+    first_dense_layers: int = 0    # deepseek: first k layers use dense FFN
+    capacity_factor: float = 1.25
+    # 'global': pjit sort-based dispatch (simple; the partitioner gathers
+    #           tokens globally — collective-heavy at scale).
+    # 'local':  shard_map replicated-routing expert parallelism — every
+    #           model-rank routes its replicated activations to its local
+    #           experts (NO dispatch all-to-all) and contributes via one
+    #           psum per MoE layer.  See EXPERIMENTS.md §Perf.
+    moe_impl: str = "global"
+
+    # MLA (deepseek)
+    mla: bool = False
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+    # SSM (mamba2)
+    ssm_state: int = 0             # 0 = no ssm layers
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+
+    # hybrid (jamba): attention every `attn_every` layers, else mamba
+    attn_every: int = 0            # 0 = all layers attention (or all ssm)
+
+    # MTP (deepseek multi-token prediction)
+    mtp_depth: int = 0
+
+    # modality stub: number of leading positions fed by precomputed
+    # frame/patch embeddings (llava / musicgen)
+    frontend_tokens: int = 0
+
+    # numerics
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+
+    # attention chunking (memory control for long sequences)
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+
+    # remat policy for the layer scan: 'none' | 'full' | 'dots'
+    remat: str = "full"
+
+    # unroll the layer/CE loops instead of lax.scan.  Default False (compact
+    # HLO, fast compiles).  The dry-run sets True: XLA's cost_analysis counts
+    # a while-loop body ONCE regardless of trip count, so exact-FLOP roofline
+    # accounting requires unrolled HLO.
+    unroll: bool = False
+
+    # FSDP: explicitly gather layer weights (bf16) at layer entry.  Without
+    # this, XLA:CPU hoists the f32 convert above the all-gather and ships
+    # f32 weights over the wire (2x); native-TPU bf16 dots gather bf16.
+    gather_bf16: bool = False
+
+    def layer_kind(self, i: int) -> str:
+        """'attn' or 'ssm' mixer for layer i."""
+        if self.ssm_state and not self.attn_every:
+            return "ssm"
+        if self.attn_every:
+            return "attn" if i % self.attn_every == self.attn_every // 2 else "ssm"
+        return "attn"
+
+    def ffn_kind(self, i: int) -> str:
+        """'dense' | 'moe' | 'none' FFN for layer i."""
+        if self.family == "ssm":
+            return "none"  # mamba2 blocks have no separate FFN
+        if self.moe_experts and i >= self.first_dense_layers and i % self.moe_every == (self.moe_every - 1):
+            return "moe"
+        return "dense"
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def n_params(self) -> int:
+        """Total parameter count (approximate, matches init_params)."""
+        d, ff, V = self.d_model, self.d_ff, self.vocab
+        total = V * d  # embed (tied head: separate head adds V*d below)
+        total += V * d  # lm head
+        for i in range(self.n_layers):
+            if self.layer_kind(i) == "attn":
+                if self.mla:
+                    total += d * self.q_lora_rank + self.q_lora_rank * self.n_heads * (self.qk_nope_dim + self.qk_rope_dim)
+                    total += d * (self.kv_lora_rank + self.qk_rope_dim)
+                    total += self.kv_lora_rank * self.n_heads * (self.qk_nope_dim + self.v_head_dim)
+                    total += self.n_heads * self.v_head_dim * d
+                else:
+                    total += d * self.n_heads * self.head_dim
+                    total += 2 * d * self.n_kv_heads * self.head_dim
+                    total += self.n_heads * self.head_dim * d
+            else:
+                di, N, H = self.d_inner, self.ssm_state, self.ssm_heads
+                total += d * (2 * di + 2 * N + H) + di * d  # in/out proj
+                total += self.ssm_conv * (di + 2 * N) + 2 * H + di
+            k = self.ffn_kind(i)
+            if k == "dense":
+                mult = 3 if self.act == "swiglu" else 2
+                total += mult * d * ff
+            elif k == "moe":
+                eff = self.moe_d_ff or ff
+                mult = 3 if self.act == "swiglu" else 2
+                total += self.moe_experts * mult * d * eff
+                total += self.moe_shared_experts * mult * d * eff
+                total += d * self.moe_experts
+            total += 2 * d  # norms
+        return total
+
+    def n_active_params(self) -> int:
+        """Params touched per token (MoE: top-k + shared only)."""
+        if not self.moe_experts:
+            return self.n_params()
+        d, ff = self.d_model, self.d_ff
+        eff = self.moe_d_ff or ff
+        mult = 3 if self.act == "swiglu" else 2
+        dead = 0
+        for i in range(self.n_layers):
+            if self.ffn_kind(i) == "moe":
+                dead += (self.moe_experts - self.moe_top_k) * mult * d * eff
+        return self.n_params() - dead
+
+
+# ---------------------------------------------------------------------------
+# logical-axis sharding
+# ---------------------------------------------------------------------------
+# logical axis -> mesh axes.  'fsdp' rules shard the big weight dimension over
+# the data axis (ZeRO-3 style); 'tp' rules shard heads/ff/experts/vocab over
+# the model axis.  The pod axis extends data parallelism.
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_kv": None,          # long-context decode reshards the cache over this
+    "embed": "data",         # fsdp shard of weight d_model dims
+    "heads": "model",
+    "kv_heads": None,        # few kv heads: replicate (see DESIGN.md)
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",      # expert parallelism
+    "exp_cap": ("pod", "data"),  # expert capacity dim: shard tokens over data
+    "expert_mlp": None,
+    "vocab": "model",
+    "lora": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "act_embed": None,       # activation d_model dim
+}
+
+_MESH_RULES: dict[str, Any] = dict(DEFAULT_RULES)
+
+
+def set_mesh_rules(rules: dict[str, Any]) -> None:
+    global _MESH_RULES
+    _MESH_RULES = dict(DEFAULT_RULES)
+    _MESH_RULES.update(rules)
+
+
+def Mesh_Rules() -> dict[str, Any]:
+    return dict(_MESH_RULES)
+
+
+def _resolve(axes: tuple[str | None, ...], mesh: Mesh | None) -> P:
+    spec = []
+    names = set(mesh.axis_names) if mesh is not None else None
+    used: set = set()  # a mesh axis may shard at most one dim
+    for ax in axes:
+        if ax is None:
+            spec.append(None)
+            continue
+        m = _MESH_RULES.get(ax, None)
+        if m is None:
+            spec.append(None)
+            continue
+        cand = m if isinstance(m, tuple) else (m,)
+        kept = tuple(x for x in cand
+                     if (names is None or x in names) and x not in used)
+        used.update(kept)
+        if not kept:
+            spec.append(None)
+        elif len(kept) == 1:
+            spec.append(kept[0])
+        else:
+            spec.append(kept)
+    return P(*spec)
+
+
+def logical_sharding(axes: tuple[str | None, ...], mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, _resolve(axes, mesh))
+
+
+_ACTIVE_MESH: Mesh | None = None
+
+
+def set_active_mesh(mesh: Mesh | None) -> None:
+    """Install the mesh used by shard() constraints (None = single device)."""
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def active_mesh() -> Mesh | None:
+    return _ACTIVE_MESH
+
+
+def shard(x: jax.Array, *axes: str | None) -> jax.Array:
+    """with_sharding_constraint by logical axis names (no-op outside a mesh)."""
+    if _ACTIVE_MESH is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ACTIVE_MESH, _resolve(axes, _ACTIVE_MESH))
+    )
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (..., S, H, D) with D even; positions: (..., S)."""
+    d = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions[..., :, None].astype(jnp.float32) * inv[None, :]  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    g = jnp.dot(x, w_gate)
+    u = jnp.dot(x, w_up)
+    h = jax.nn.silu(g) * u
+    return jnp.dot(h, w_down)
+
+
+def gelu_mlp(x: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    return jnp.dot(jax.nn.gelu(jnp.dot(x, w_up)), w_down)
+
+
+def chunked_cross_entropy(
+    h: jax.Array,            # (B, S, d) final hidden states
+    head: jax.Array,         # (d, V) unembedding
+    labels: jax.Array,       # (B, S) int32
+    *,
+    chunk: int = 512,
+    unroll: bool = False,
+) -> jax.Array:
+    """Mean CE without materializing (B, S, V) logits: scan over seq chunks."""
+    B, S, d = h.shape
+    nchunk = max(S // chunk, 1)
+    chunk = S // nchunk
+    h_c = h.reshape(B, nchunk, chunk, d).swapaxes(0, 1)        # (nc, B, c, d)
+    y_c = labels.reshape(B, nchunk, chunk).swapaxes(0, 1)      # (nc, B, c)
+
+    def body(carry, xs):
+        hc, yc = xs
+        logits = jnp.dot(hc, head).astype(jnp.float32)         # (B, c, V)
+        logits = shard(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - tgt), None
+
+    if unroll:
+        total = jnp.float32(0.0)
+        for i in range(nchunk):
+            total, _ = body(total, (h_c[i], y_c[i]))
+    else:
+        total, _ = jax.lax.scan(body, jnp.float32(0.0), (h_c, y_c))
+    return total / (B * S)

@@ -1,0 +1,448 @@
+"""Decoder-only LM assembled from the mixer/FFN building blocks.
+
+Layers are grouped into *segments*: maximal runs of a repeating layer
+pattern (period <= 8).  Each segment's parameters are stacked along a
+leading axis and applied with lax.scan (one compiled layer body per
+segment), which keeps lowered-HLO size and compile time independent of
+depth — essential for the 61/72-layer dry-run configs.
+
+    dense llama-style : one segment  [attn+dense] x L
+    deepseek-v3       : [attn+dense] x 3, then [attn(MLA)+moe] x 58
+    dbrx              : [attn+moe] x 40
+    mamba2            : [ssm] x 48
+    jamba             : [(ssm ssm ssm attn ssm ssm ssm ssm) with moe every
+                         2nd layer] x 9   (period-8 pattern)
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (
+    ModelConfig,
+    chunked_cross_entropy,
+    rms_norm,
+    shard,
+)
+
+
+# ---------------------------------------------------------------------------
+# segments
+# ---------------------------------------------------------------------------
+def layer_specs(cfg: ModelConfig) -> list[tuple[str, str]]:
+    return [(cfg.layer_kind(i), cfg.ffn_kind(i)) for i in range(cfg.n_layers)]
+
+
+def build_segments(cfg: ModelConfig) -> list[tuple[tuple[tuple[str, str], ...], int]]:
+    kinds = layer_specs(cfg)
+    L = len(kinds)
+    segments = []
+    i = 0
+    while i < L:
+        best_p, best_r = 1, 1
+        for p in (1, 2, 4, 8):
+            if i + p > L:
+                break
+            pat = kinds[i:i + p]
+            r = 1
+            while i + p * (r + 1) <= L and kinds[i + p * r:i + p * (r + 1)] == pat:
+                r += 1
+            if p > 1 and r < 2:
+                continue  # an unrepeated multi-layer pattern just bloats HLO
+            if p * r > best_p * best_r:
+                best_p, best_r = p, r
+        segments.append((tuple(kinds[i:i + best_p]), best_r))
+        i += best_p * best_r
+    return segments
+
+
+# ---------------------------------------------------------------------------
+# per-layer params / axes / apply
+# ---------------------------------------------------------------------------
+def _dense_ffn_params(cfg: ModelConfig, key) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(ff)
+    pd = cfg.param_dtype
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": (jax.random.normal(ks[0], (d, ff)) * s_in).astype(pd),
+            "w_up": (jax.random.normal(ks[1], (d, ff)) * s_in).astype(pd),
+            "w_down": (jax.random.normal(ks[2], (ff, d)) * s_out).astype(pd),
+        }
+    return {
+        "w_up": (jax.random.normal(ks[0], (d, ff)) * s_in).astype(pd),
+        "w_down": (jax.random.normal(ks[1], (ff, d)) * s_out).astype(pd),
+    }
+
+
+def _dense_ffn_axes(cfg: ModelConfig) -> dict:
+    if cfg.act == "swiglu":
+        return {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+                "w_down": ("mlp", "embed")}
+    return {"w_up": ("embed", "mlp"), "w_down": ("mlp", "embed")}
+
+
+def layer_params(cfg: ModelConfig, spec: tuple[str, str], key) -> dict:
+    mixer, ffn = spec
+    k1, k2 = jax.random.split(key)
+    p: dict = {"norm1": jnp.ones((cfg.d_model,), cfg.param_dtype)}
+    if mixer == "attn":
+        p["mixer"] = attn_mod.mla_params(cfg, k1) if cfg.mla else attn_mod.gqa_params(cfg, k1)
+    else:
+        p["mixer"] = ssm_mod.ssm_params(cfg, k1)
+    if ffn != "none":
+        p["norm2"] = jnp.ones((cfg.d_model,), cfg.param_dtype)
+        p["ffn"] = moe_mod.moe_params(cfg, k2) if ffn == "moe" else _dense_ffn_params(cfg, k2)
+    return p
+
+
+def layer_axes(cfg: ModelConfig, spec: tuple[str, str]) -> dict:
+    mixer, ffn = spec
+    ax: dict = {"norm1": ("act_embed",)}
+    if mixer == "attn":
+        ax["mixer"] = attn_mod.mla_axes() if cfg.mla else attn_mod.gqa_axes()
+    else:
+        ax["mixer"] = ssm_mod.ssm_axes()
+    if ffn != "none":
+        ax["norm2"] = ("act_embed",)
+        ax["ffn"] = moe_mod.moe_axes(cfg) if ffn == "moe" else _dense_ffn_axes(cfg)
+    return ax
+
+
+def apply_layer(
+    cfg: ModelConfig,
+    spec: tuple[str, str],
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: dict | None,
+    cache_len,
+):
+    """Returns (x, new_cache_dict_or_None, aux_loss)."""
+    mixer, ffn = spec
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    new_cache = None
+    if mixer == "attn":
+        kv = None
+        if cache is not None:
+            kv = attn_mod.KVCache(k=cache["k"], v=cache["v"], length=cache_len)
+        fwd = attn_mod.mla_forward if cfg.mla else attn_mod.gqa_forward
+        out, kv2 = fwd(cfg, p["mixer"], h, positions, kv)
+        if kv2 is not None:
+            new_cache = {"k": kv2.k, "v": kv2.v}
+        elif cache is not None:
+            new_cache = {"k": cache["k"], "v": cache["v"]}
+    else:
+        sc = None
+        if cache is not None:
+            sc = ssm_mod.SSMCache(conv=cache["conv"], state=cache["state"], length=cache_len)
+        out, sc2 = ssm_mod.ssm_forward(cfg, p["mixer"], h, sc)
+        if sc2 is not None:
+            new_cache = {"conv": sc2.conv, "state": sc2.state}
+        elif cache is not None:
+            new_cache = {"conv": cache["conv"], "state": cache["state"]}
+    x = x + out.astype(x.dtype)
+    aux = jnp.float32(0.0)
+    if ffn != "none":
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if ffn == "moe":
+            out2, aux = moe_mod.moe_forward(cfg, p["ffn"], h2)
+        elif cfg.act == "swiglu":
+            from repro.models.common import swiglu
+            out2 = swiglu(h2, p["ffn"]["w_gate"], p["ffn"]["w_up"], p["ffn"]["w_down"])
+        else:
+            from repro.models.common import gelu_mlp
+            out2 = gelu_mlp(h2, p["ffn"]["w_up"], p["ffn"]["w_down"])
+        x = x + out2.astype(x.dtype)
+    x = shard(x, "batch", "seq", "act_embed")
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+def layer_cache_init(cfg: ModelConfig, spec: tuple[str, str], batch: int, max_len: int, dtype):
+    mixer, _ = spec
+    if mixer == "attn":
+        if cfg.mla:
+            return {
+                "k": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+                "v": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+            }
+        return {
+            "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        }
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_state), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim), jnp.float32),
+    }
+
+
+def cache_axes(cfg: ModelConfig, spec: tuple[str, str], *, seq_axis: str = "seq_kv") -> dict:
+    """Logical axes for one layer's cache (stacking axis added by caller)."""
+    mixer, _ = spec
+    if mixer == "attn":
+        if cfg.mla:
+            return {"k": ("batch", seq_axis, None), "v": ("batch", seq_axis, None)}
+        return {"k": ("batch", seq_axis, "kv_heads", None),
+                "v": ("batch", seq_axis, "kv_heads", None)}
+    return {"conv": ("batch", None, "ssm_inner"),
+            "state": ("batch", "ssm_inner", None, None)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    caches = []
+    for pattern, r in build_segments(cfg):
+        seg = {}
+        for si, spec in enumerate(pattern):
+            one = layer_cache_init(cfg, spec, batch, max_len, dtype)
+            seg[f"slot{si}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (r,) + a.shape).copy(), one
+            )
+        caches.append(seg)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+class LanguageModel:
+    """Functional LM: params are plain pytrees; this class holds config and
+    the segment plan."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.segments = build_segments(cfg)
+
+    # ---- init ----
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, len(self.segments) + 3)
+        params: dict = {
+            "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 0.02
+                      ).astype(cfg.param_dtype),
+            "head": (jax.random.normal(keys[1], (cfg.d_model, cfg.vocab))
+                     / math.sqrt(cfg.d_model)).astype(cfg.param_dtype),
+            "final_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+            "segments": [],
+        }
+        for si, (pattern, r) in enumerate(self.segments):
+            seg_key = keys[2 + si]
+            seg = {}
+            for slot, spec in enumerate(pattern):
+                lkeys = jax.random.split(jax.random.fold_in(seg_key, slot), r)
+                seg[f"slot{slot}"] = jax.vmap(
+                    lambda k, spec=spec: layer_params(self.cfg, spec, k)
+                )(lkeys)
+            params["segments"].append(seg)
+        if cfg.mtp_depth:
+            k = keys[-1]
+            params["mtp"] = {
+                "proj": (jax.random.normal(k, (2 * cfg.d_model, cfg.d_model))
+                         / math.sqrt(2 * cfg.d_model)).astype(cfg.param_dtype),
+                "norm_h": jnp.ones((cfg.d_model,), cfg.param_dtype),
+                "norm_e": jnp.ones((cfg.d_model,), cfg.param_dtype),
+                "block": layer_params(cfg, ("attn", "dense"), jax.random.fold_in(k, 1)),
+            }
+        return params
+
+    def param_axes(self) -> dict:
+        cfg = self.cfg
+        axes: dict = {
+            "embed": ("vocab", "embed"),
+            "head": ("embed", "vocab"),
+            "final_norm": ("act_embed",),
+            "segments": [],
+        }
+        for pattern, r in self.segments:
+            seg = {}
+            for slot, spec in enumerate(pattern):
+                one = layer_axes(cfg, spec)
+                seg[f"slot{slot}"] = jax.tree.map(
+                    lambda ax: (None,) + tuple(ax), one,
+                    is_leaf=lambda x: isinstance(x, tuple),
+                )
+            axes["segments"].append(seg)
+        if cfg.mtp_depth:
+            axes["mtp"] = {
+                "proj": ("embed", None),
+                "norm_h": ("act_embed",), "norm_e": ("act_embed",),
+                "block": layer_axes(cfg, ("attn", "dense")),
+            }
+        return axes
+
+    # ---- forward ----
+    def forward(
+        self,
+        params: dict,
+        tokens: jax.Array,                  # (B, S) int32
+        *,
+        frontend: jax.Array | None = None,  # (B, F, d) stub embeddings
+        caches: list | None = None,
+        cache_len=None,
+        positions: jax.Array | None = None,
+    ):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+        if frontend is not None:
+            F = frontend.shape[1]
+            x = jnp.concatenate([frontend.astype(x.dtype), x[:, F:]], axis=1)
+        x = shard(x, "batch", "seq", "act_embed")
+        if positions is None:
+            base = cache_len if cache_len is not None else 0
+            positions = base + jnp.arange(S)[None, :].astype(jnp.int32)
+            positions = jnp.broadcast_to(positions, (B, S))
+        clen = cache_len if cache_len is not None else jnp.int32(0)
+
+        aux_total = jnp.float32(0.0)
+        new_caches = [] if caches is not None else None
+
+        for si, (pattern, r) in enumerate(self.segments):
+            seg_p = params["segments"][si]
+            seg_c = caches[si] if caches is not None else None
+            with_cache = seg_c is not None
+
+            def body(carry, xs, pattern=pattern, with_cache=with_cache):
+                x, aux = carry
+                if with_cache:
+                    lp, lc = xs
+                else:
+                    lp, lc = xs, None
+                new_lc = {}
+                for slot, spec in enumerate(pattern):
+                    c_slot = lc[f"slot{slot}"] if with_cache else None
+                    slot_p = lp[f"slot{slot}"]
+                    if cfg.gather_bf16:
+                        # FSDP: force the weight all-gather on the bf16
+                        # params (replicate-before-convert); the barrier
+                        # stops XLA from hoisting the f32 upcast above the
+                        # gather (2x wire bytes otherwise)
+                        slot_p = jax.tree.map(
+                            lambda w: jax.lax.optimization_barrier(
+                                shard(w, *([None] * w.ndim))), slot_p)
+                    x, nc, a = apply_layer(
+                        self.cfg, spec, slot_p,
+                        x, positions, c_slot, clen,
+                    )
+                    aux = aux + a
+                    if with_cache:
+                        new_lc[f"slot{slot}"] = nc
+                return (x, aux), (new_lc if with_cache else None)
+
+            if cfg.remat == "full":
+                body = jax.checkpoint(body)
+            elif cfg.remat == "dots":
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+                )
+            xs = (seg_p, seg_c) if with_cache else seg_p
+            if cfg.unroll:
+                # python loop over layers: exact-FLOP HLO for the dry-run
+                ys_list = []
+                carry = (x, aux_total)
+                for li in range(r):
+                    xs_i = jax.tree.map(lambda a: a[li], xs)
+                    carry, y = body(carry, xs_i)
+                    ys_list.append(y)
+                (x, aux_total) = carry
+                ys = (jax.tree.map(lambda *a: jnp.stack(a), *ys_list)
+                      if with_cache else None)
+            else:
+                (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), xs)
+            if with_cache:
+                new_caches.append(ys)
+
+        h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return h, aux_total, new_caches
+
+    # ---- losses / steps ----
+    def loss(self, params, tokens, labels, frontend=None):
+        cfg = self.cfg
+        h, aux, _ = self.forward(params, tokens, frontend=frontend)
+        ce = chunked_cross_entropy(h, params["head"].astype(cfg.compute_dtype), labels,
+                           unroll=cfg.unroll)
+        total = ce + 0.01 * aux
+        if cfg.mtp_depth:
+            total = total + 0.3 * self._mtp_loss(params, h, tokens, labels)
+        return total, {"ce": ce, "aux": aux}
+
+    def _mtp_loss(self, params, h, tokens, labels):
+        """deepseek-style multi-token prediction (depth 1): predict t+2 from
+        the main trunk's hidden state at t combined with the embedding of t+1."""
+        cfg = self.cfg
+        mtp = params["mtp"]
+        B, S = tokens.shape
+        # shift: combine h[:, :-1] with embed(tokens[:, 1:])
+        e_next = jnp.take(params["embed"], tokens[:, 1:], axis=0).astype(h.dtype)
+        hh = rms_norm(h[:, :-1], mtp["norm_h"], cfg.norm_eps)
+        ee = rms_norm(e_next, mtp["norm_e"], cfg.norm_eps)
+        z = jnp.concatenate([hh, ee], axis=-1) @ mtp["proj"].astype(h.dtype)
+        positions = jnp.broadcast_to(jnp.arange(S - 1)[None], (B, S - 1)).astype(jnp.int32)
+        z, _, _ = apply_layer(cfg, ("attn", "dense"), mtp["block"], z, positions, None, jnp.int32(0))
+        # labels for t+2 = labels shifted by one more
+        lab2 = labels[:, 1:]
+        return chunked_cross_entropy(z, params["head"].astype(h.dtype), lab2,
+                             unroll=cfg.unroll)
+
+    def prefill(self, params, tokens, caches, frontend=None):
+        h, _, new_caches = self.forward(
+            params, tokens, frontend=frontend, caches=caches, cache_len=jnp.int32(0)
+        )
+        logits = h[:, -1] @ params["head"].astype(h.dtype)
+        return logits, new_caches
+
+    def decode_step(self, params, token, caches, cache_len):
+        """token: (B, 1) -> (logits (B, V), new caches)."""
+        h, _, new_caches = self.forward(
+            params, token, caches=caches, cache_len=cache_len
+        )
+        logits = h[:, -1] @ params["head"].astype(h.dtype)
+        return logits, new_caches
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    return LanguageModel(cfg).init(jax.random.PRNGKey(seed))
+
+
+# convenience step-function builders (used by launch/ and tests)
+def train_step_fn(cfg: ModelConfig, optimizer):
+    model = LanguageModel(cfg)
+
+    def step(params, opt_state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch["tokens"], batch["labels"],
+                              frontend=batch.get("frontend"))
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **metrics}
+
+    return step
+
+
+def prefill_step_fn(cfg: ModelConfig):
+    model = LanguageModel(cfg)
+
+    def step(params, batch, caches):
+        return model.prefill(params, batch["tokens"], caches,
+                             frontend=batch.get("frontend"))
+
+    return step
+
+
+def decode_step_fn(cfg: ModelConfig):
+    model = LanguageModel(cfg)
+
+    def step(params, token, caches, cache_len):
+        return model.decode_step(params, token, caches, cache_len)
+
+    return step

@@ -1,0 +1,239 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch and expert
+parallelism over the 'model' mesh axis.
+
+Dispatch is fully static-shaped: the N*k (token, expert) assignments are
+sorted by expert id, each assignment gets a rank within its expert via a
+cumulative count, assignments beyond the per-expert capacity C are dropped,
+kept tokens are scattered into an (E, C, d) buffer, the expert GEMMs run as
+one batched einsum (E sharded over 'model' -> XLA inserts the all-to-alls),
+and results are combined back with the router gates.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, shard
+
+
+def moe_params(cfg: ModelConfig, key, *, n_experts: int | None = None) -> dict:
+    d = cfg.d_model
+    eff = cfg.moe_d_ff or cfg.d_ff
+    E = n_experts if n_experts is not None else cfg.moe_experts
+    ks = jax.random.split(key, 5)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(eff)
+    pd = cfg.param_dtype
+    p = {
+        "router": (jax.random.normal(ks[0], (d, E)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d, eff)) * s_in).astype(pd),
+        "w_up": (jax.random.normal(ks[2], (E, d, eff)) * s_in).astype(pd),
+        "w_down": (jax.random.normal(ks[3], (E, eff, d)) * s_out).astype(pd),
+    }
+    if cfg.moe_shared_experts:
+        sh = jax.random.split(ks[4], 3)
+        m = cfg.moe_shared_experts
+        p["shared_gate"] = (jax.random.normal(sh[0], (d, m * eff)) * s_in).astype(pd)
+        p["shared_up"] = (jax.random.normal(sh[1], (d, m * eff)) * s_in).astype(pd)
+        p["shared_down"] = (jax.random.normal(sh[2], (m * eff, d)) * s_out).astype(pd)
+    return p
+
+
+def moe_axes(cfg: ModelConfig) -> dict:
+    ax = {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", "expert_mlp"),
+        "w_up": ("experts", "embed", "expert_mlp"),
+        "w_down": ("experts", "expert_mlp", "embed"),
+    }
+    if cfg.moe_shared_experts:
+        ax["shared_gate"] = ("embed", "mlp")
+        ax["shared_up"] = ("embed", "mlp")
+        ax["shared_down"] = ("mlp", "embed")
+    return ax
+
+
+def moe_forward(cfg: ModelConfig, p: dict, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).  Dispatch impl per cfg.moe_impl."""
+    if cfg.moe_impl == "local":
+        from repro.models.common import active_mesh
+        mesh = active_mesh()
+        if mesh is not None and "model" in mesh.axis_names:
+            return moe_forward_local(cfg, p, x, mesh)
+    return _moe_forward_global(cfg, p, x)
+
+
+def _moe_forward_global(cfg: ModelConfig, p: dict, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss)."""
+    B, S, d = x.shape
+    E, k = p["w_gate"].shape[0], cfg.moe_top_k
+    N = B * S
+    xt = x.reshape(N, d)
+
+    logits = jnp.dot(xt.astype(jnp.float32), p["router"])          # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                           # (N, k)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    me = probs.mean(axis=0)                                        # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(1.0) / (N * k)
+    aux = E * jnp.sum(me * ce)
+
+    # --- sort-based dispatch -------------------------------------------------
+    NK = N * k
+    cap = int(math.ceil(NK / E * cfg.capacity_factor))
+    flat_e = eidx.reshape(NK)
+    flat_g = gate.reshape(NK)
+    tok_of = jnp.arange(NK, dtype=jnp.int32) // k                  # token index
+
+    order = jnp.argsort(flat_e, stable=True)                       # (NK,)
+    e_sorted = flat_e[order]
+    # rank within expert: position - start offset of that expert's segment
+    start = jnp.searchsorted(e_sorted, jnp.arange(E), side="left") # (E,)
+    rank = jnp.arange(NK) - start[e_sorted]
+    keep = rank < cap
+    slot = jnp.where(keep, e_sorted * cap + rank, E * cap)         # overflow -> waste slot
+
+    buf = jnp.zeros((E * cap + 1, d), x.dtype)
+    buf = buf.at[slot].set(xt[tok_of[order]])
+    buf = buf[:-1].reshape(E, cap, d)
+    # E over 'model' (expert parallelism) AND capacity over 'data': without
+    # the capacity shard every data-row replicates the full expert GEMMs
+    # (16x the FLOPs at mesh 16x16 — caught by the dry-run roofline).
+    buf = shard(buf, "experts", "exp_cap", "act_embed")
+
+    # --- expert FFN (batched over E; E sharded over 'model') -----------------
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = jax.nn.silu(g) * u
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"])             # (E, cap, d)
+    out_e = shard(out_e, "experts", "exp_cap", "act_embed")
+
+    # --- combine --------------------------------------------------------------
+    out_flat = out_e.reshape(E * cap, d)
+    gathered = jnp.where(keep[:, None], out_flat[jnp.clip(slot, 0, E * cap - 1)], 0.0)
+    contrib = gathered * flat_g[order][:, None].astype(x.dtype)
+    out = jnp.zeros((N, d), x.dtype).at[tok_of[order]].add(contrib)
+
+    if "shared_gate" in p:
+        sg = jnp.dot(xt, p["shared_gate"])
+        su = jnp.dot(xt, p["shared_up"])
+        out = out + jnp.dot(jax.nn.silu(sg) * su, p["shared_down"])
+
+    return out.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# 'local' dispatch: replicated-routing expert parallelism (shard_map)
+# ---------------------------------------------------------------------------
+def moe_forward_local(cfg: ModelConfig, p: dict, x: jax.Array, mesh) -> tuple[jax.Array, jax.Array]:
+    """Every model-rank holds the full (data-shard of the) activations, so it
+    can select the tokens routed to its LOCAL experts without any dispatch
+    collective; expert outputs are combined with one psum over 'model'.
+
+    Comm per MoE layer = one (N_loc, d) psum — the same wire cost as a dense
+    Megatron TP layer — versus the global-sort dispatch whose partitioning
+    gathers every token to every device (~100x more on deepseek-v3).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    B, S, d = x.shape
+    E, k = p["w_gate"].shape[0], cfg.moe_top_k
+    names = mesh.axis_names
+    dp = tuple(ax for ax in ("pod", "data") if ax in names)
+    N = B * S
+    xt = x.reshape(N, d)
+    xt = shard(xt, "batch", "act_embed")
+
+    n_dp = 1
+    for ax in dp:
+        n_dp *= dict(zip(mesh.axis_names, mesh.devices.shape))[ax]
+    n_mp = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    N_loc = N // n_dp
+    E_loc = E // n_mp
+    cap = max(int(math.ceil(N_loc * k / E * cfg.capacity_factor)), 1)
+
+    router = p["router"]
+
+    def local_fn(x_loc, w_router, w_gate, w_up, w_down):
+        # x_loc: (N_loc, d) — identical on every model-rank of a data row.
+        # w_*: (E_loc, d/n_dp, f) — this rank's experts, FSDP-sharded on d.
+        # Gather the d-shards HERE, in bf16, over the data axis: the
+        # transpose of this all_gather is exactly the ZeRO reduce-scatter
+        # of the expert grads (and no f32 convert can be hoisted above a
+        # manual collective).
+        if dp:
+            # optimization_barrier pins the gather payloads to bf16: without
+            # it XLA hoists the (CPU-only) f32 upcast above the collective
+            # and doubles the wire bytes vs what a TPU would move.
+            w_gate, w_up, w_down = jax.lax.optimization_barrier(
+                (w_gate, w_up, w_down))
+            w_gate = jax.lax.all_gather(w_gate, dp, axis=1, tiled=True)
+            w_up = jax.lax.all_gather(w_up, dp, axis=1, tiled=True)
+            w_down = jax.lax.all_gather(w_down, dp, axis=2, tiled=True)
+            w_gate, w_up, w_down = jax.lax.optimization_barrier(
+                (w_gate, w_up, w_down))
+        logits = jnp.dot(x_loc.astype(jnp.float32), w_router)      # (N_loc, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, eidx = jax.lax.top_k(probs, k)                       # (N_loc, k)
+        gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+        me = probs.mean(axis=0)
+        ce = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(1.0) / (N_loc * k)
+        aux = E * jnp.sum(me * ce)
+
+        mrank = jax.lax.axis_index("model")
+        e_lo = mrank * E_loc
+        flat_e = eidx.reshape(-1)                                  # (N_loc*k,)
+        flat_g = gate.reshape(-1)
+        tok_of = jnp.arange(N_loc * k, dtype=jnp.int32) // k
+        local_e = flat_e - e_lo                                    # in [0,E_loc)?
+        mine = (local_e >= 0) & (local_e < E_loc)
+        # rank within local expert via sorted positions
+        order = jnp.argsort(jnp.where(mine, local_e, E_loc), stable=True)
+        e_sorted = jnp.where(mine, local_e, E_loc)[order]
+        start = jnp.searchsorted(e_sorted, jnp.arange(E_loc), side="left")
+        rank = jnp.arange(N_loc * k) - start[jnp.clip(e_sorted, 0, E_loc - 1)]
+        keep = (e_sorted < E_loc) & (rank < cap)
+        slot = jnp.where(keep, e_sorted * cap + rank, E_loc * cap)
+
+        buf = jnp.zeros((E_loc * cap + 1, d), x_loc.dtype)
+        buf = buf.at[slot].set(x_loc[tok_of[order]])
+        buf = buf[:-1].reshape(E_loc, cap, d)
+
+        g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+        u = jnp.einsum("ecd,edf->ecf", buf, w_up)
+        h = jax.nn.silu(g) * u
+        out_e = jnp.einsum("ecf,efd->ecd", h, w_down).reshape(E_loc * cap, d)
+
+        gathered = jnp.where(keep[:, None], out_e[jnp.clip(slot, 0, E_loc * cap - 1)], 0.0)
+        contrib = gathered * flat_g[order][:, None].astype(x_loc.dtype)
+        out = jnp.zeros((N_loc, d), x_loc.dtype).at[tok_of[order]].add(contrib)
+        # combine partial expert outputs across model-ranks; barriers keep
+        # the psum payload in bf16 (see the weight-gather note above)
+        out = jax.lax.optimization_barrier(out.astype(x_loc.dtype))
+        out = jax.lax.psum(out, "model")
+        out = jax.lax.optimization_barrier(out)
+        aux = jax.lax.pmean(aux, "model")
+        return out, aux
+
+    # in_specs match the parameters' natural (experts->model, d->data FSDP)
+    # shardings so shard_map inserts NO resharding collectives.
+    w_spec = P("model", dp if dp else None, None)
+    wd_spec = P("model", None, dp if dp else None)
+    out, aux = jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(dp if dp else None, None), P(None, None),
+                  w_spec, w_spec, wd_spec),
+        out_specs=(P(dp if dp else None, None), P()),
+        check_vma=False,
+    )(xt, router, p["w_gate"], p["w_up"], p["w_down"])
+
+    out = out.reshape(B, S, d)
+    if "shared_gate" in p:
+        sg = jnp.dot(xt, p["shared_gate"])
+        su = jnp.dot(xt, p["shared_up"])
+        out = out + (jnp.dot(jax.nn.silu(sg) * su, p["shared_down"])).reshape(B, S, d)
+    return out, aux

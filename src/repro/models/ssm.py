@@ -1,0 +1,201 @@
+"""Mamba2 (SSD — state-space duality) mixer: chunked quadratic-within-chunk /
+recurrent-across-chunk training form, and O(1) recurrent decode.
+
+Projections are kept separate (x, z, B, C, dt) rather than packed, so the
+inner dimension shards cleanly over the 'model' axis (heads = d_inner /
+headdim are the TP unit; B/C/dt are small and replicated).  The depthwise
+causal conv is expressed as a sum of shifted scalings (width 4).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, rms_norm, shard
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # (B, K-1, d_inner + 2N) rolling conv window (x|B|C)
+    state: jax.Array  # (B, H, N, P) SSD recurrent state
+    length: jax.Array
+
+
+def ssm_params(cfg: ModelConfig, key) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    N, H, K = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d)
+    pd = cfg.param_dtype
+    return {
+        "w_x": (jax.random.normal(ks[0], (d, di)) * s).astype(pd),
+        "w_z": (jax.random.normal(ks[1], (d, di)) * s).astype(pd),
+        "w_B": (jax.random.normal(ks[2], (d, N)) * s).astype(pd),
+        "w_C": (jax.random.normal(ks[3], (d, N)) * s).astype(pd),
+        "w_dt": (jax.random.normal(ks[4], (d, H)) * s).astype(pd),
+        "conv_w": (jax.random.normal(ks[5], (K, di + 2 * N)) * 0.1).astype(pd),
+        "conv_b": jnp.zeros((di + 2 * N,), pd),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "norm": jnp.ones((di,), pd),
+        "w_out": (jax.random.normal(ks[6], (di, d)) / math.sqrt(di)).astype(pd),
+    }
+
+
+def ssm_axes() -> dict:
+    return {
+        "w_x": ("embed", "ssm_inner"), "w_z": ("embed", "ssm_inner"),
+        "w_B": ("embed", "ssm_state"), "w_C": ("embed", "ssm_state"),
+        "w_dt": ("embed", None),
+        "conv_w": (None, None), "conv_b": (None,),
+        "A_log": (None,), "D": (None,), "dt_bias": (None,),
+        "norm": ("ssm_inner",),
+        "w_out": ("ssm_inner", "embed"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, x: (B, S, C), w: (K, C)."""
+    K = w.shape[0]
+    out = x * w[-1]
+    for t in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (t, 0), (0, 0)))[:, :-t]
+        out = out + shifted * w[-1 - t]
+    return jax.nn.silu(out + b)
+
+
+def ssm_forward(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,                   # (B, S, d)
+    cache: SSMCache | None = None,
+) -> tuple[jax.Array, SSMCache | None]:
+    B, S, d = x.shape
+    if cache is not None and S == 1:
+        return _ssm_decode(cfg, p, x, cache)
+
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    Q = min(cfg.ssm_chunk, S)
+    nc = max(S // Q, 1)
+    Q = S // nc
+
+    z = jnp.dot(x, p["w_z"])
+    xin = jnp.dot(x, p["w_x"])
+    Bp = jnp.dot(x, p["w_B"])
+    Cp = jnp.dot(x, p["w_C"])
+    xbc = jnp.concatenate([xin, Bp, Cp], axis=-1)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xin, Bp, Cp = xbc[..., :di], xbc[..., di:di + N], xbc[..., di + N:]
+    xin = shard(xin, "batch", "seq", "ssm_inner")
+
+    dt = jax.nn.softplus(jnp.dot(x, p["w_dt"]).astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                     # (H,)
+
+    xh = xin.reshape(B, nc, Q, H, P)
+    Bc = Bp.reshape(B, nc, Q, N).astype(jnp.float32)
+    Cc = Cp.reshape(B, nc, Q, N).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, H)
+    dA = dtc * A                                                 # (B,nc,Q,H)
+    cs = jnp.cumsum(dA, axis=2)                                  # within-chunk cumsum
+
+    # ---- intra-chunk (attention-like dual form) ----
+    # decay L[i,j] = exp(cs_i - cs_j), j <= i.  Mask BEFORE exp: for j > i the
+    # difference is positive and exp overflows to inf, and inf*0 in the
+    # backward pass of a post-exp mask poisons the gradients with NaNs.
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]           # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    diff = jnp.where(mask[None, None, :, :, None], diff, -1e30)
+    Ldec = jnp.exp(diff)
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)                   # (B,nc,Q,Q)
+    xdt = xh.astype(jnp.float32) * dtc[..., None]                # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", CB, Ldec, xdt)
+
+    # ---- chunk states + inter-chunk recurrence ----
+    seg = jnp.exp(cs[:, :, -1:, :] - cs)                         # (B,nc,Q,H)
+    # states = sum_j B_j (dt_j x_j) exp(cs_Q - cs_j); xdt already carries dt_j
+    states = jnp.einsum("bckn,bckh,bckhp->bchnp", Bc, seg, xdt)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                       # (B,nc,H)
+
+    h0 = (cache.state.astype(jnp.float32) if cache is not None
+          else jnp.zeros((B, H, N, P), jnp.float32))
+
+    def scan_body(h, inp):
+        st, cd = inp                                             # (B,H,N,P), (B,H)
+        h_out = h                                                # state entering the chunk
+        h = h * cd[..., None, None] + st
+        return h, h_out
+
+    states_t = jnp.moveaxis(states, 1, 0)                        # (nc,B,H,N,P)
+    cd_t = jnp.moveaxis(chunk_decay, 1, 0)                       # (nc,B,H)
+    h_final, h_in = jax.lax.scan(scan_body, h0, (states_t, cd_t))
+    h_in = jnp.moveaxis(h_in, 0, 1)                              # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", Cc, jnp.exp(cs), h_in)
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + p["D"][None, None, :, None] * xin.reshape(B, S, H, P).astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.dot(y, p["w_out"])
+
+    new_cache = None
+    if cache is not None:
+        K = cfg.ssm_conv
+        raw = jnp.concatenate([jnp.dot(x, p["w_x"]), jnp.dot(x, p["w_B"]), jnp.dot(x, p["w_C"])], axis=-1)
+        tailwin = raw[:, -(K - 1):]  # last K-1 pre-conv inputs
+        new_cache = SSMCache(
+            conv=tailwin.astype(cache.conv.dtype),
+            state=h_final.astype(cache.state.dtype),
+            length=cache.length + S,
+        )
+    return out, new_cache
+
+
+def _ssm_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: SSMCache):
+    B, _, d = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    K = cfg.ssm_conv
+
+    z = jnp.dot(x[:, 0], p["w_z"])
+    raw = jnp.concatenate(
+        [jnp.dot(x[:, 0], p["w_x"]), jnp.dot(x[:, 0], p["w_B"]), jnp.dot(x[:, 0], p["w_C"])],
+        axis=-1,
+    )                                                            # (B, C)
+    win = jnp.concatenate([cache.conv, raw[:, None]], axis=1)    # (B, K, C)
+    conv = jnp.einsum("bkc,kc->bc", win, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv)
+    xin, Bp, Cp = xbc[..., :di], xbc[..., di:di + N], xbc[..., di + N:]
+
+    dt = jax.nn.softplus(jnp.dot(x[:, 0], p["w_dt"]).astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                         # (B,H)
+
+    xh = xin.reshape(B, H, P).astype(jnp.float32)
+    h = cache.state.astype(jnp.float32)
+    h = h * dA[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", Bp.astype(jnp.float32), dt, xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", Cp.astype(jnp.float32), h)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.dot(y, p["w_out"])[:, None]
+
+    new_cache = SSMCache(
+        conv=win[:, 1:].astype(cache.conv.dtype),
+        state=h.astype(cache.state.dtype),
+        length=cache.length + 1,
+    )
+    return out, new_cache
+
+
+def ssm_cache_init(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_state), dtype),
+        state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim), jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+    )

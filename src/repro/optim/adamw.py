@@ -1,0 +1,152 @@
+"""AdamW implemented in-repo (optax is not vendored offline).
+
+Features needed at 1000+ node scale:
+  * optimizer state sharded identically to the parameters (the param
+    shardings already combine FSDP('data') x TP('model'), so m/v inherit
+    ZeRO-3-style sharding for free);
+  * optional int8 second-moment quantization (block-wise scales) — cuts
+    optimizer HBM by ~3.5 bytes/param, the difference between fitting and
+    not fitting deepseek-v3-scale training on 16 GB chips;
+  * global-norm gradient clipping;
+  * cosine LR schedule with linear warmup.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+_Q_BLOCK = 128
+
+
+def _quantize_i8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Block-wise symmetric int8 quantization along the last axis."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % _Q_BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _Q_BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize_i8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def _quantize_v(v: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Second moment quantized in the SQRT domain (linear int8 on v itself
+    zeroes small entries and the  m/(sqrt(v)+eps)  update explodes; sqrt
+    errors only *shrink* updates).
+
+    Scales are per-channel over the LAST axis only — no flatten/reshape.
+    A flattened 128-block layout crosses shard boundaries, and the dry-run
+    roofline caught XLA all-gathering the ENTIRE optimizer state (2.4 TB on
+    deepseek-v3) to requantize it.  Per-channel scales keep every op
+    elementwise-or-rowwise, so the quantized state shards exactly like the
+    parameter."""
+    r = jnp.sqrt(v)
+    scale = jnp.max(jnp.abs(r), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(r / scale), 0, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize_v(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    r = q.astype(jnp.float32) * scale
+    return (r * r).reshape(shape)
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float | Callable = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    quantize_v: bool = False      # int8 second moment (8-bit-Adam-style)
+
+    def init(self, params) -> dict:
+        def zeros_like_leaf(p):
+            if self.quantize_v:
+                q, s = _quantize_v(jnp.zeros(p.shape, jnp.float32))
+                return {"m": jnp.zeros(p.shape, jnp.float32), "vq": q, "vs": s}
+            return {"m": jnp.zeros(p.shape, jnp.float32),
+                    "v": jnp.zeros(p.shape, jnp.float32)}
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(zeros_like_leaf, params),
+        }
+
+    def update(self, params, grads, state):
+        step = state["step"] + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+
+        # global-norm clip
+        leaves = jax.tree.leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, mu):
+            g = g.astype(jnp.float32) * scale
+            m = b1 * mu["m"] + (1 - b1) * g
+            if self.quantize_v:
+                v_prev = _dequantize_v(mu["vq"], mu["vs"], p.shape)
+            else:
+                v_prev = mu["v"]
+            v = b2 * v_prev + (1 - b2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decay matrices only (not norms/biases)
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            if self.quantize_v:
+                vq, vs = _quantize_v(v)
+                return new_p, {"m": m, "vq": vq, "vs": vs}
+            return new_p, {"m": m, "v": v}
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_mu = tdef.flatten_up_to(state["mu"])
+        out = [upd(p, g, mu) for p, g, mu in zip(flat_p, flat_g, flat_mu)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_mu = tdef.unflatten([o[1] for o in out])
+        return new_params, {"step": step, "mu": new_mu}
+
+    # sharding helper: optimizer state inherits each param's logical axes
+    def state_axes(self, param_axes) -> dict:
+        def ax(a):
+            a = tuple(a)
+            if self.quantize_v:
+                # vq shards like the param; the per-channel scale keeps the
+                # leading axes and has a broadcast last dim
+                vs = a[:-1] + (None,) if a else a
+                return {"m": a, "vq": a, "vs": vs}
+            return {"m": a, "v": a}
+        return {
+            "step": (),
+            "mu": jax.tree.map(ax, param_axes, is_leaf=lambda x: isinstance(x, tuple)),
+        }

@@ -1,0 +1,27 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real CPU device.  Only launch/dryrun.py (its own process) forces 512
+# placeholder devices.
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_spd(n: int, density: float, seed: int) -> sp.csc_matrix:
+    """Random sparse SPD with symmetric pattern + diagonal dominance."""
+    r = np.random.default_rng(seed)
+    nnz = max(int(density * n * n), n)
+    rows = r.integers(0, n, nnz)
+    cols = r.integers(0, n, nnz)
+    vals = r.standard_normal(nnz)
+    A = sp.csr_matrix((vals, (rows, cols)), shape=(n, n))
+    A = (A + A.T) * 0.5
+    d = np.abs(A).sum(axis=1)
+    A = A + sp.diags(np.asarray(d).ravel() + 1.0)
+    A = sp.csc_matrix(A)
+    A.sort_indices()
+    return A

@@ -1,0 +1,76 @@
+"""Dry-run machinery smoke tests.
+
+The full 512-device dry-run needs XLA_FLAGS set before jax init, so it runs
+as a subprocess here with reduced (smoke) configs on an 8-device host mesh —
+the same build_cell/lower_cell/roofline path as the production sweep.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    from repro.launch.roofline import roofline, model_flops_for
+    from repro.launch.steps import build_cell, lower_cell
+    from repro.configs.registry import ShapeSpec
+    import repro.configs.registry as reg
+    import repro.launch.steps as steps
+
+    # shrink the shapes so smoke configs compile in seconds
+    reg.SHAPES = {
+        "train_4k": ShapeSpec("train_4k", 256, 8, "train"),
+        "prefill_32k": ShapeSpec("prefill_32k", 512, 4, "prefill"),
+        "decode_32k": ShapeSpec("decode_32k", 512, 8, "decode"),
+    }
+    steps.SHAPES = reg.SHAPES
+    import repro.configs as C
+    C.SHAPES = reg.SHAPES
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    out = {}
+    for arch, shape in [("llama3.2-1b", "train_4k"),
+                        ("deepseek-v3-671b", "train_4k"),
+                        ("jamba-1.5-large-398b", "prefill_32k"),
+                        ("mamba2-1.3b", "decode_32k")]:
+        cell = build_cell(arch, shape, mesh, smoke=True, unroll=False)
+        lowered = lower_cell(cell, mesh)
+        compiled = lowered.compile()
+        rf = roofline(compiled, compiled.as_text(), 8, cfg=cell.cfg,
+                      spec=reg.SHAPES[shape], kind=cell.kind,
+                      model_flops=model_flops_for(cell.cfg, reg.SHAPES[shape], cell.kind))
+        out[f"{arch}/{shape}"] = {
+            "flops": rf["flops_per_device"],
+            "coll": rf["collective_wire_bytes_per_device"],
+            "mem_ok": "error" not in rf["memory_analysis"],
+        }
+    print("RESULT " + json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_dryrun_smoke_mesh_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    assert len(out) == 4
+    for k, v in out.items():
+        assert v["flops"] > 0, (k, v)
+        assert v["mem_ok"], (k, v)
+    # train cells move bytes over the wire on a 2x4 mesh
+    assert out["llama3.2-1b/train_4k"]["coll"] > 0

@@ -1,0 +1,73 @@
+"""HLO cost-parser unit tests on hand-written HLO snippets."""
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo, _dot_flops, _split_computations
+
+HLO = """\
+HloModule test
+
+%body.1 (arg: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %arg = (s32[], f32[8,16]) parameter(0)
+  %g0 = s32[] get-tuple-element(%arg), index=0
+  %g1 = f32[8,16]{1,0} get-tuple-element(%arg), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %dot.5 = f32[8,16]{1,0} dot(%g1, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%dot.5), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%add.c
+  %t = (s32[], f32[8,16]) tuple(%g0, %ar)
+}
+
+%cond.1 (arg2: (s32[], f32[8,16])) -> pred[] {
+  %arg2 = (s32[], f32[8,16]) parameter(0)
+  %c0 = s32[] get-tuple-element(%arg2), index=0
+  %k = s32[] constant(12)
+  %cmp = pred[] compare(%c0, %k), direction=LT
+}
+
+%add.c (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[8,16], p1: f32[16,32]) -> f32[8,32] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %p1 = f32[16,32]{1,0} parameter(1)
+  %init = (s32[], f32[8,16]) tuple(...)
+  %while.9 = (s32[], f32[8,16]) while(%init), condition=%cond.1, body=%body.1
+  %gte = f32[8,16]{1,0} get-tuple-element(%while.9), index=1
+  %dot.9 = f32[8,32]{1,0} dot(%gte, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[8,32]{1,0} all-gather(%dot.9), channel_id=2, replica_groups={{0,1},{2,3}}, dimensions={1}
+}
+"""
+
+
+def test_split_finds_computations():
+    comps = _split_computations(HLO)
+    assert set(comps) >= {"body.1", "cond.1", "add.c", "main"}
+    assert "p0" in comps["main"].shapes or "p0" in comps["main"].shapes
+
+
+def test_trip_count_and_totals():
+    c = analyze_hlo(HLO, 8)
+    # body dot: 2*8*16*16 = 4096 flops, x12 trips; entry dot: 2*8*16*32 = 8192
+    assert c.flops == 12 * 4096 + 8192
+    # all-reduce in body: 8*16*4 bytes * 2 * (4-1)/4 = 512*1.5=... b=512B
+    ar = 2 * 512 * (3 / 4) * 12
+    # all-gather at entry: out 8*32*4=1024B * (2-1)/2
+    ag = 1024 * 0.5
+    assert abs(c.coll_wire_bytes - (ar + ag)) < 1e-6
+    assert c.coll_counts["all-reduce"] == 12
+    assert c.coll_counts["all-gather"] == 1
+
+
+def test_batched_dot_flops():
+    comps = _split_computations("""\
+ENTRY %e (a: f32[4,8,16], b: f32[4,16,32]) -> f32[4,8,32] {
+  %a = f32[4,8,16]{2,1,0} parameter(0)
+  %b = f32[4,16,32]{2,1,0} parameter(1)
+  %d = f32[4,8,32]{2,1,0} dot(%a, %b), lhs_batch_dims={0}, lhs_contracting_dims={2}, rhs_batch_dims={0}, rhs_contracting_dims={1}
+}
+""")
+    c = comps["e"]
+    line = [l for l in c.lines if "dot(" in l][0]
+    assert _dot_flops(line, c.shapes) == 2 * 4 * 8 * 16 * 32

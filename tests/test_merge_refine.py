@@ -1,0 +1,79 @@
+"""Amalgamation + partition-refinement invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import make_spd
+from repro.core import (
+    cholesky,
+    count_blocks,
+    merge_supernodes,
+    refine_partition,
+    symbolic_analyze,
+    symbolic_pipeline,
+)
+from repro.sparse import laplacian_2d, laplacian_3d
+
+
+def test_merge_respects_growth_cap():
+    A = laplacian_3d(12)
+    sym, _ = symbolic_analyze(A)
+    base = sym.factor_nnz()
+    for cap in (0.0, 0.1, 0.25, 0.5):
+        merged = merge_supernodes(sym, max_growth=cap)
+        merged.validate()
+        assert merged.factor_nnz() <= base * (1 + cap) + 1
+        assert merged.nsuper <= sym.nsuper
+
+
+def test_merge_reduces_supernodes_monotonically():
+    A = laplacian_2d(40)
+    sym, _ = symbolic_analyze(A)
+    m1 = merge_supernodes(sym, max_growth=0.1)
+    m2 = merge_supernodes(sym, max_growth=0.3)
+    assert m2.nsuper <= m1.nsuper <= sym.nsuper
+
+
+def test_refine_never_increases_blocks():
+    A = laplacian_3d(10)
+    sym, _ = symbolic_analyze(A)
+    merged = merge_supernodes(sym)
+    before = count_blocks(merged)
+    refined, g = refine_partition(merged)
+    refined.validate()
+    after = count_blocks(refined)
+    assert after <= before
+    # g is a permutation that only moves columns within supernodes
+    n = sym.n
+    assert sorted(g.tolist()) == list(range(n))
+    for s in range(merged.nsuper):
+        f, l = int(merged.super_ptr[s]), int(merged.super_ptr[s + 1])
+        assert set(g[f:l].tolist()) == set(range(f, l))
+
+
+@pytest.mark.parametrize("merge,refine", [(False, False), (True, False), (True, True)])
+def test_factorization_correct_through_pipeline(merge, refine):
+    A = make_spd(120, 0.03, 5)
+    F = cholesky(A, method="rl", merge=merge, refine=refine)
+    b = np.arange(120, dtype=np.float64)
+    x = F.solve(b)
+    assert np.linalg.norm(A @ x - b) / np.linalg.norm(b) < 1e-10
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_property_pipeline_solves(seed):
+    A = make_spd(70, 0.06, seed)
+    b = np.random.default_rng(seed).standard_normal(70)
+    for method in ("rl", "rlb"):
+        F = cholesky(A, method=method)
+        x = F.solve(b)
+        assert np.linalg.norm(A @ x - b) / max(np.linalg.norm(b), 1e-12) < 1e-9
+
+
+def test_logdet_matches_slogdet():
+    A = make_spd(90, 0.05, 11)
+    F = cholesky(A, method="rlb")
+    sign, ld = np.linalg.slogdet(A.toarray())
+    assert sign > 0
+    assert abs(F.logdet() - ld) < 1e-8 * max(abs(ld), 1)

@@ -1,0 +1,76 @@
+"""The paper's GPU-offload path: device engine == host engine numerically,
+threshold policy behaves, transfers are counted."""
+import numpy as np
+import pytest
+
+from conftest import make_spd
+from repro.core import DeviceEngine, cholesky, symbolic_pipeline
+from repro.sparse import laplacian_3d
+
+
+@pytest.fixture(scope="module")
+def problem():
+    A = laplacian_3d(10)
+    sym, Ap = symbolic_pipeline(A)
+    b = np.ones(A.shape[0])
+    F_host = cholesky(A, method="rl", sym=sym, Aperm=Ap)
+    return A, sym, Ap, b, F_host
+
+
+@pytest.mark.parametrize("method,kw", [
+    ("rl", {}),
+    ("rlb", {}),
+    ("rlb", {"batch_transfers": True}),
+])
+def test_offload_matches_host(problem, method, kw):
+    A, sym, Ap, b, F_host = problem
+    eng = DeviceEngine()
+    F = cholesky(A, method=method, sym=sym, Aperm=Ap,
+                 device_engine=eng, offload_threshold=2000, **kw)
+    for p1, p2 in zip(F.panels, F_host.panels):
+        np.testing.assert_allclose(p1, p2, rtol=1e-10, atol=1e-9)
+    assert F.stats["supernodes_on_device"] > 0
+    assert eng.stats["transfers_in"] == F.stats["supernodes_on_device"]
+
+
+def test_gpu_only_mode(problem):
+    """threshold=None with an engine == offload everything (paper's 'GPU only')."""
+    A, sym, Ap, b, F_host = problem
+    eng = DeviceEngine()
+    F = cholesky(A, method="rl", sym=sym, Aperm=Ap, device_engine=eng)
+    assert F.stats["supernodes_on_device"] == F.stats["supernodes_total"]
+    x = F.solve(b)
+    assert np.linalg.norm(A @ x - b) / np.linalg.norm(b) < 1e-10
+
+
+def test_threshold_monotone(problem):
+    A, sym, Ap, b, _ = problem
+    counts = []
+    for thr in (100_000, 10_000, 1_000):
+        eng = DeviceEngine()
+        F = cholesky(A, method="rl", sym=sym, Aperm=Ap,
+                     device_engine=eng, offload_threshold=thr)
+        counts.append(F.stats["supernodes_on_device"])
+    assert counts == sorted(counts)  # lower threshold -> more on device
+
+
+def test_pallas_engine_small():
+    A = make_spd(60, 0.08, 4)
+    sym, Ap = symbolic_pipeline(A)
+    b = np.ones(60)
+    for method in ("rl", "rlb"):
+        eng = DeviceEngine(backend="pallas")
+        F = cholesky(A, method=method, sym=sym, Aperm=Ap,
+                     device_engine=eng, offload_threshold=0)
+        x = F.solve(b)
+        assert np.linalg.norm(A @ x - b) / np.linalg.norm(b) < 1e-9
+
+
+def test_fused_vs_unfused_engine(problem):
+    A, sym, Ap, b, F_host = problem
+    for fused in (True, False):
+        eng = DeviceEngine(fused=fused)
+        F = cholesky(A, method="rl", sym=sym, Aperm=Ap,
+                     device_engine=eng, offload_threshold=5000)
+        x = F.solve(b)
+        assert np.linalg.norm(A @ x - b) / np.linalg.norm(b) < 1e-10

@@ -1,0 +1,95 @@
+"""Symbolic-analysis correctness: etree, column counts, supernodes — checked
+against brute-force numeric factorizations (random values => structural
+cancellation has probability zero)."""
+import numpy as np
+import pytest
+import scipy.sparse as sp
+from hypothesis import given, settings, strategies as st
+
+from conftest import make_spd
+from repro.core import (
+    col_counts,
+    etree,
+    find_supernodes,
+    postorder,
+    symbolic_analyze,
+)
+
+
+def dense_chol_pattern(A: sp.csc_matrix) -> np.ndarray:
+    """Numeric L pattern oracle.  Structural zeros stay *exactly* 0.0 in the
+    dense factorization (every contributing term is 0), while true fill may
+    be arbitrarily small through near-cancellation — so compare against 0."""
+    L = np.linalg.cholesky(A.toarray())
+    return L != 0.0
+
+
+def brute_etree(A: sp.csc_matrix) -> np.ndarray:
+    pat = dense_chol_pattern(A)
+    n = A.shape[0]
+    parent = np.full(n, -1, dtype=np.int64)
+    for j in range(n):
+        below = np.nonzero(pat[j + 1:, j])[0]
+        if below.size:
+            parent[j] = j + 1 + below[0]
+    return parent
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("n,density", [(30, 0.1), (60, 0.05), (90, 0.03)])
+def test_etree_and_counts_vs_bruteforce(n, density, seed):
+    A = make_spd(n, density, seed)
+    parent = etree(A)
+    assert np.array_equal(parent, brute_etree(A))
+    post = postorder(parent)
+    assert sorted(post.tolist()) == list(range(n))
+    # children before parents
+    pos = np.empty(n, dtype=np.int64)
+    pos[post] = np.arange(n)
+    for j in range(n):
+        if parent[j] != -1:
+            assert pos[j] < pos[parent[j]]
+    cc = col_counts(A, parent, post)
+    pat = dense_chol_pattern(A)
+    assert np.array_equal(cc, pat.sum(axis=0))
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_symbolic_analyze_structures(seed):
+    A = make_spd(80, 0.05, seed)
+    sym, Aperm = symbolic_analyze(A)
+    sym.validate()
+    # supernode rows must equal the numeric factor pattern
+    pat = dense_chol_pattern(sp.csc_matrix(Aperm))
+    for s in range(sym.nsuper):
+        f = int(sym.super_ptr[s])
+        rows_oracle = np.nonzero(pat[:, f])[0]
+        assert np.array_equal(sym.rows[s], rows_oracle)
+
+
+def test_supernodes_maximal():
+    A = make_spd(60, 0.08, 7)
+    parent = etree(A)
+    post = postorder(parent)
+    cc = col_counts(A, parent, post)
+    ptr = find_supernodes(parent, cc)
+    # inside a supernode: chain parents + colcount steps of -1
+    for s in range(ptr.shape[0] - 1):
+        for j in range(ptr[s] + 1, ptr[s + 1]):
+            assert parent[j - 1] == j and cc[j] == cc[j - 1] - 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(15, 50))
+def test_property_counts_match_pattern(seed, n):
+    A = make_spd(n, 0.1, seed)
+    parent = etree(A)
+    post = postorder(parent)
+    cc = col_counts(A, parent, post)
+    pat = dense_chol_pattern(A)
+    assert np.array_equal(cc, pat.sum(axis=0))
+    # colcount of root-path monotonicity invariant: struct(j)\{j} subset of
+    # struct(parent(j)) => cc[parent] >= cc[j] - 1
+    for j in range(n):
+        if parent[j] != -1:
+            assert cc[parent[j]] >= cc[j] - 1
