@@ -97,6 +97,77 @@ def run_suite(names=None, *, rl_threshold=RL_THRESHOLD, rlb_threshold=RLB_THRESH
     return rows
 
 
+def run_schedule_compare(names=None, *, verify: bool = True):
+    """Sequential vs level-scheduled batched execution, full offload.
+
+    Both runs push EVERY supernode through the same DeviceEngine (no size
+    threshold), so the comparison isolates the scheduling change: the
+    level-scheduled path stacks each (etree level x engine bucket) group
+    into one vmapped dispatch, collapsing O(nsuper) transfers/dispatches to
+    O(levels x buckets).  Returns one dict per matrix with times, engine
+    counters, and reduction ratios.
+    """
+    names = names or list(MATRIX_SUITE)
+    rows = []
+    for name in names:
+        A = make_suite_matrix(name)
+        sym, Aperm = symbolic_pipeline(A)
+        n = A.shape[0]
+        b = np.ones(n)
+
+        eng_seq = DeviceEngine()
+        cholesky(A, method="rl", sym=sym, Aperm=Aperm, device_engine=eng_seq)
+        eng_seq.stats = {k: 0 for k in eng_seq.stats}  # count the timed run only
+        t_seq, _ = _time(lambda: cholesky(A, method="rl", sym=sym, Aperm=Aperm,
+                                          device_engine=eng_seq))
+
+        eng_lvl = DeviceEngine()
+        cholesky(A, method="rl", schedule="levels", sym=sym, Aperm=Aperm,
+                 device_engine=eng_lvl)
+        eng_lvl.stats = {k: 0 for k in eng_lvl.stats}
+        t_lvl, F = _time(lambda: cholesky(A, method="rl", schedule="levels",
+                                          sym=sym, Aperm=Aperm,
+                                          device_engine=eng_lvl))
+
+        rec = {
+            "matrix": name, "n": n, "nsuper": sym.nsuper,
+            "seq_s": t_seq, "levels_s": t_lvl,
+            "seq_transfers_in": eng_seq.stats["transfers_in"],
+            "levels_transfers_in": eng_lvl.stats["transfers_in"],
+            "seq_device_calls": eng_seq.stats["device_calls"],
+            "levels_device_calls": eng_lvl.stats["device_calls"],
+            "transfers_in_ratio":
+                eng_seq.stats["transfers_in"] / max(1, eng_lvl.stats["transfers_in"]),
+            "device_calls_ratio":
+                eng_seq.stats["device_calls"] / max(1, eng_lvl.stats["device_calls"]),
+            "levels": F.stats["schedule"]["levels"],
+            "batches": F.stats["schedule"]["batches"],
+        }
+        if verify:
+            x = F.solve(b)
+            rec["levels_resid"] = float(np.linalg.norm(A @ x - b) / np.linalg.norm(b))
+        rows.append(rec)
+    return rows
+
+
+def table_schedule(rows) -> str:
+    """Seq vs level-scheduled batched execution (full offload)."""
+    out = ["matrix,n,nsuper,levels,batches,seq_s,levels_s,"
+           "transfers_in_seq,transfers_in_levels,transfers_in_ratio,"
+           "device_calls_seq,device_calls_levels,device_calls_ratio,resid"]
+    for r in rows:
+        out.append(
+            f"{r['matrix']},{r['n']},{r['nsuper']},{r['levels']},{r['batches']},"
+            f"{r['seq_s']:.3f},{r['levels_s']:.3f},"
+            f"{r['seq_transfers_in']},{r['levels_transfers_in']},"
+            f"{r['transfers_in_ratio']:.1f},"
+            f"{r['seq_device_calls']},{r['levels_device_calls']},"
+            f"{r['device_calls_ratio']:.1f},"
+            f"{r.get('levels_resid', float('nan')):.2e}"
+        )
+    return "\n".join(out)
+
+
 def table1(rows) -> str:
     """Paper Table I analogue: runtimes for offloaded RL + speedups."""
     out = ["matrix,n,rl_gpu_s,speedup_vs_best_cpu,supernodes_on_gpu,supernodes_total"]

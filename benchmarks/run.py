@@ -20,7 +20,14 @@ DEFAULT_SUITE = ["lap2d_256", "lap2d_384", "lap2d9_256", "lap3d_24",
                  "kkt_192"]
 
 
-def bench_cholesky(suite) -> None:
+def _max_resid(rows) -> float | None:
+    """Largest *_resid across rows; None when no suite emitted residuals
+    (e.g. verify=False runs or an empty/killed suite)."""
+    resids = [v for r in rows for k, v in r.items() if k.endswith("_resid")]
+    return max(resids) if resids else None
+
+
+def bench_cholesky(suite) -> dict:
     import time
     from benchmarks import cholesky_tables as ct
     RESULTS.mkdir(parents=True, exist_ok=True)
@@ -36,8 +43,30 @@ def bench_cholesky(suite) -> None:
     print(ct.table2(rows))
     print("\n# Figure 3 — performance profile (fraction within tau of best)")
     print(ct.fig3_profile(rows))
-    resid = max(r.get("rl_resid", 0) + r.get("rl_gpu_resid", 0) for r in rows)
-    print(f"\n# residual sanity: max {resid:.3e}")
+    resid = _max_resid(rows)
+    if resid is None:
+        print("\n# residual sanity: no residuals recorded")
+    else:
+        print(f"\n# residual sanity: max {resid:.3e}")
+    return {"rows": rows, "max_resid": resid}
+
+
+def bench_schedule(suite) -> dict:
+    """Sequential vs level-scheduled batched offload (see core/schedule.py)."""
+    import time
+    from benchmarks import cholesky_tables as ct
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    rows = []
+    for name in suite:
+        t0 = time.time()
+        rows.extend(ct.run_schedule_compare([name]))
+        print(f"# done schedule {name} in {time.time() - t0:.0f}s", flush=True)
+    print("\n# Schedule — seq vs level-scheduled batched offload (full offload)")
+    print(ct.table_schedule(rows))
+    resid = _max_resid(rows)
+    if resid is not None:
+        print(f"# schedule residual sanity: max {resid:.3e}")
+    return {"rows": rows, "max_resid": resid}
 
 
 def bench_kernels() -> None:
@@ -77,7 +106,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    choices=[None, "cholesky", "kernels", "roofline"])
+                    choices=[None, "cholesky", "schedule", "kernels", "roofline"])
     args = ap.parse_args()
 
     if args.quick:
@@ -88,8 +117,18 @@ def main() -> None:
     else:
         suite = DEFAULT_SUITE
 
+    bench = {}
     if args.only in (None, "cholesky"):
-        bench_cholesky(suite)
+        bench["cholesky"] = bench_cholesky(suite)
+    if args.only in (None, "schedule"):
+        # the schedule comparison offloads everything, so stick to the quick
+        # suite unless a full run was explicitly requested
+        bench["schedule"] = bench_schedule(suite if args.full else QUICK_SUITE)
+    if bench:
+        RESULTS.mkdir(parents=True, exist_ok=True)
+        out = RESULTS / "BENCH_cholesky.json"
+        out.write_text(json.dumps(bench, indent=2))
+        print(f"\n# machine-readable results -> {out}")
     if args.only in (None, "kernels"):
         bench_kernels()
     if args.only in (None, "roofline"):

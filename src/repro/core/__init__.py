@@ -8,18 +8,35 @@ import jax as _jax
 _jax.config.update("jax_enable_x64", True)
 
 from repro.core.api import cholesky, solve, symbolic_pipeline
-from repro.core.engines import DeviceEngine
+from repro.core.engines import DeviceEngine, bucket_shape
 from repro.core.merge import merge_supernodes
 from repro.core.numeric import (
     CholeskyFactor,
     HostEngine,
     OffloadPolicy,
+    PanelStore,
+    factorize_levels,
     factorize_rl,
     factorize_rlb,
+    init_panel_store,
     init_panels,
 )
 from repro.core.refine import refine_partition
-from repro.core.relind import ancestor_updates, count_blas_calls, count_blocks, supernode_blocks
+from repro.core.relind import (
+    ancestor_updates,
+    build_scatter_plan,
+    count_blas_calls,
+    count_blocks,
+    scatter_plan,
+    supernode_blocks,
+)
+from repro.core.schedule import (
+    LevelSchedule,
+    build_schedule,
+    cached_schedule,
+    level_sets,
+    supernode_levels,
+)
 from repro.core.symbolic import (
     SymbolicFactor,
     col_counts,
@@ -32,9 +49,14 @@ from repro.core.symbolic import (
 __all__ = [
     "cholesky", "solve", "symbolic_pipeline",
     "merge_supernodes", "refine_partition",
-    "CholeskyFactor", "HostEngine", "OffloadPolicy",
-    "factorize_rl", "factorize_rlb", "init_panels",
-    "ancestor_updates", "count_blas_calls", "count_blocks", "supernode_blocks",
+    "CholeskyFactor", "HostEngine", "OffloadPolicy", "PanelStore",
+    "factorize_levels", "factorize_rl", "factorize_rlb",
+    "init_panel_store", "init_panels",
+    "ancestor_updates", "build_scatter_plan", "count_blas_calls",
+    "count_blocks", "scatter_plan", "supernode_blocks",
+    "DeviceEngine", "bucket_shape",
+    "LevelSchedule", "build_schedule", "cached_schedule", "level_sets",
+    "supernode_levels",
     "SymbolicFactor", "col_counts", "etree", "find_supernodes", "postorder",
     "symbolic_analyze",
 ]

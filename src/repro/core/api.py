@@ -14,6 +14,7 @@ from repro.core.numeric import (
     CholeskyFactor,
     HostEngine,
     OffloadPolicy,
+    factorize_levels,
     factorize_rl,
     factorize_rlb,
 )
@@ -56,6 +57,8 @@ def cholesky(
     device_engine=None,
     offload_threshold: int | None = None,
     batch_transfers: bool = False,
+    schedule: str = "seq",
+    max_batch: int = 256,
     sym: SymbolicFactor | None = None,
     Aperm: sp.csc_matrix | None = None,
 ) -> CholeskyFactor:
@@ -69,8 +72,18 @@ def cholesky(
                       with a device engine = offload everything ("GPU only")
     batch_transfers   RLB only: paper's version 1 (single bulk transfer per
                       supernode) instead of version 2 (per-block transfers)
+    schedule          'seq' (paper-faithful one-supernode-at-a-time loop) or
+                      'levels' (level-scheduled batched execution: etree
+                      levels x engine buckets run as single vmapped
+                      dispatches — see repro.core.schedule).  'levels' uses
+                      the RL update-matrix formulation for either method.
+    max_batch         'levels' only: max supernodes stacked per dispatch
     sym / Aperm       reuse a precomputed symbolic factorization
     """
+    if method not in ("rl", "rlb"):
+        raise ValueError(f"unknown method {method!r} (want 'rl' or 'rlb')")
+    if schedule not in ("seq", "levels"):
+        raise ValueError(f"unknown schedule {schedule!r} (want 'seq' or 'levels')")
     if sym is None or Aperm is None:
         sym, Aperm = symbolic_pipeline(
             A, ordering=ordering, merge=merge, refine=refine, max_growth=max_growth
@@ -78,16 +91,19 @@ def cholesky(
     policy = None
     if device_engine is not None:
         policy = OffloadPolicy(threshold=offload_threshold if offload_threshold is not None else 0)
+    if schedule == "levels":
+        return factorize_levels(
+            sym, Aperm, engine=HostEngine(), device_engine=device_engine,
+            policy=policy, max_batch=max_batch,
+        )
     if method == "rl":
         return factorize_rl(
             sym, Aperm, engine=HostEngine(), device_engine=device_engine, policy=policy
         )
-    if method == "rlb":
-        return factorize_rlb(
-            sym, Aperm, engine=HostEngine(), device_engine=device_engine,
-            policy=policy, batch_transfers=batch_transfers,
-        )
-    raise ValueError(f"unknown method {method!r} (want 'rl' or 'rlb')")
+    return factorize_rlb(
+        sym, Aperm, engine=HostEngine(), device_engine=device_engine,
+        policy=policy, batch_transfers=batch_transfers,
+    )
 
 
 def solve(A: sp.spmatrix, b: np.ndarray, **kw) -> np.ndarray:

@@ -18,10 +18,15 @@ Layout of a staged panel (rows r, width w, buckets Wp >= w, Lp >= Wp + r - w):
     [w   : Wp)   identity extension (keeps chol/trsm exact)
     [Wp  : Wp + r - w)  tail rows (the rectangular part)
     [... : Lp)   zero padding
+
+Beyond the scalar protocol (stage/factor/read_panel/syrk_tail), the engine
+speaks a *batched* protocol used by the level-scheduled path
+(repro.core.schedule): ``stage_batch`` stacks same-bucket panels into one
+(batch, Lp, Wp) buffer with identity-padded lanes, ``factor_batch`` runs a
+single vmapped fused POTRF+TRSM+SYRK dispatch, and ``read_panels_batch`` /
+``syrk_tail_batch`` bulk-transfer the results back.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -57,11 +62,45 @@ def _bucket_nb(nb: int) -> int:
     return -(-nb // 4096) * 4096
 
 
+def bucket_shape(rows: int, w: int) -> tuple[int, int]:
+    """Padded (Lp, Wp) bucket for a supernode panel of ``rows`` x ``w``.
+
+    This is THE bucket function: ``stage``/``stage_batch`` pad to it and the
+    level scheduler (repro.core.schedule) groups supernodes by it, so one
+    compiled program per bucket serves both the sequential and batched paths.
+    """
+    Wp = _bucket_w(w)
+    m = rows - w
+    # Lp must also cover the largest padded RLB block (see _slice_rows)
+    Lp = _bucket(max(Wp + m, _bucket_nb(m) if m else 0))
+    return Lp, Wp
+
+
+def _bucket_batch(b: int) -> int:
+    """Pad a batch count to the next power of two: at most ~log2(max batch)
+    distinct compiled batch programs per bucket, never one per group size."""
+    p = 1
+    while p < b:
+        p *= 2
+    return p
+
+
 class _Handle:
     __slots__ = ("dev", "rows", "w", "Lp", "Wp", "_u")
 
     def __init__(self, dev, rows, w, Lp, Wp):
         self.dev, self.rows, self.w, self.Lp, self.Wp = dev, rows, w, Lp, Wp
+        self._u = None
+
+
+class _BatchHandle:
+    """A staged batch of same-bucket panels: dev is (Bp, Lp, Wp) with the
+    first ``B`` lanes real and the rest identity padding."""
+    __slots__ = ("dev", "rows", "ws", "Lp", "Wp", "B", "_u")
+
+    def __init__(self, dev, rows, ws, Lp, Wp, B):
+        self.dev, self.rows, self.ws = dev, rows, ws
+        self.Lp, self.Wp, self.B = Lp, Wp, B
         self._u = None
 
 
@@ -81,9 +120,19 @@ class DeviceEngine:
         self.fused = fused
         self.stats = {"transfers_in": 0, "transfers_out": 0,
                       "bytes_in": 0, "bytes_out": 0, "device_calls": 0}
+        # compiled programs keyed by (kind, *bucket shape).  A plain dict on
+        # the instance (NOT functools.lru_cache on bound methods, which pins
+        # ``self`` in the global cache forever) so the jit cache dies with
+        # the engine.
+        self._programs: dict = {}
+
+    def _program(self, key, build):
+        fn = self._programs.get(key)
+        if fn is None:
+            fn = self._programs[key] = build()
+        return fn
 
     # -- jitted device programs, cached per bucket shape -------------------
-    @functools.lru_cache(maxsize=None)
     def _factor_fn(self, Lp: int, Wp: int):
         backend = self.backend
 
@@ -99,9 +148,8 @@ class DeviceEngine:
                 return jnp.concatenate([ld, x], axis=0)
             return ld
 
-        return jax.jit(f)
+        return self._program(("factor", Lp, Wp), lambda: jax.jit(f))
 
-    @functools.lru_cache(maxsize=None)
     def _syrk_tail_fn(self, Lp: int, Wp: int):
         backend = self.backend
 
@@ -111,9 +159,8 @@ class DeviceEngine:
                 return kops.syrk_ln(b, backend="pallas")
             return b @ b.T
 
-        return jax.jit(f)
+        return self._program(("syrk_tail", Lp, Wp), lambda: jax.jit(f))
 
-    @functools.lru_cache(maxsize=None)
     def _factor_syrk_fn(self, Lp: int, Wp: int):
         """Fused factor + update-matrix program: one round trip per supernode."""
         factor = self._factor_fn(Lp, Wp)
@@ -123,7 +170,7 @@ class DeviceEngine:
             fp = factor(p)
             return fp, syrk(fp)
 
-        return jax.jit(f)
+        return self._program(("factor_syrk", Lp, Wp), lambda: jax.jit(f))
 
     @staticmethod
     def _slice_rows(p, start, npad, n):
@@ -135,7 +182,6 @@ class DeviceEngine:
         blk = jnp.roll(blk, -(start - s), axis=0)
         return jnp.where(jnp.arange(npad)[:, None] < n, blk, 0)
 
-    @functools.lru_cache(maxsize=None)
     def _syrk_block_fn(self, Lp: int, Wp: int, nbp: int):
         backend = self.backend
 
@@ -145,9 +191,8 @@ class DeviceEngine:
                 return kops.syrk_ln(blk, backend="pallas")
             return blk @ blk.T
 
-        return jax.jit(f)
+        return self._program(("syrk_block", Lp, Wp, nbp), lambda: jax.jit(f))
 
-    @functools.lru_cache(maxsize=None)
     def _gemm_block_fn(self, Lp: int, Wp: int, nrp: int, ncp: int):
         backend = self.backend
 
@@ -158,21 +203,60 @@ class DeviceEngine:
                 return kops.gemm_nt(r, c, backend="pallas")
             return r @ c.T
 
-        return jax.jit(f)
+        return self._program(("gemm_block", Lp, Wp, nrp, ncp), lambda: jax.jit(f))
+
+    def _batch_factor_syrk_fn(self, Bp: int, Lp: int, Wp: int):
+        """Batched fused program: vmap the per-panel POTRF+TRSM+SYRK over a
+        stacked (Bp, Lp, Wp) buffer — ONE dispatch per (level, bucket) batch.
+        Returns (factored panels, update matrices); the update output is
+        (Bp, Lp-Wp, Lp-Wp) with only the lower triangle meaningful."""
+        backend = self.backend
+
+        def one(p):
+            if backend == "pallas":
+                fp = kops.factor_panel(p, Wp, backend="pallas")
+            else:
+                # Panels store only the lower triangle (upper is zero).  The
+                # scalar LAPACK lowering never reads the upper part, but the
+                # BATCHED cholesky lowering does — mirror the strict lower
+                # triangle to make the input symmetric before factoring.
+                a = p[:Wp, :Wp]
+                a = a + jnp.tril(a, -1).T
+                ld = jax.lax.linalg.cholesky(a, symmetrize_input=False)
+                if Lp > Wp:
+                    x = jax.lax.linalg.triangular_solve(
+                        ld, p[Wp:], left_side=False, lower=True, transpose_a=True
+                    )
+                    fp = jnp.concatenate([ld, x], axis=0)
+                else:
+                    fp = ld
+            if Lp == Wp:
+                return fp, jnp.zeros((0, 0), p.dtype)
+            b = fp[Wp:]
+            u = kops.syrk_ln(b, backend="pallas") if backend == "pallas" else b @ b.T
+            return fp, u
+
+        return self._program(
+            ("batch_factor_syrk", Bp, Lp, Wp), lambda: jax.jit(jax.vmap(one))
+        )
 
     # -- engine protocol ----------------------------------------------------
-    def stage(self, P: np.ndarray, w: int) -> _Handle:
+    @staticmethod
+    def _pack_panel(buf: np.ndarray, P: np.ndarray, w: int, Wp: int) -> None:
+        """Pack one supernode panel into a zeroed (Lp, Wp) bucket buffer
+        (diag block, identity extension, tail rows — see module docstring)."""
         rows = P.shape[0]
-        Wp = _bucket_w(w)
-        m = rows - w
-        # Lp must also cover the largest padded RLB block (see _slice_rows)
-        Lp = _bucket(max(Wp + m, _bucket_nb(m) if m else 0))
-        buf = np.zeros((Lp, Wp), dtype=P.dtype)
         buf[:w, :w] = P[:w]
         if Wp > w:
             idx = np.arange(w, Wp)
             buf[idx, idx] = 1.0
         buf[Wp:Wp + rows - w, :w] = P[w:]
+
+    def stage(self, P: np.ndarray, w: int) -> _Handle:
+        rows = P.shape[0]
+        Lp, Wp = bucket_shape(rows, w)
+        buf = np.zeros((Lp, Wp), dtype=P.dtype)
+        self._pack_panel(buf, P, w, Wp)
         dev = jax.device_put(buf)
         self.stats["transfers_in"] += 1
         self.stats["bytes_in"] += buf.nbytes
@@ -220,6 +304,72 @@ class DeviceEngine:
         self.stats["device_calls"] += 1
         g = self._gemm_block_fn(h.Lp, h.Wp, nrp, ncp)(h.dev, kr0, nr, kc0, nc)
         return g[:nr, :nc]
+
+    # -- batched protocol (level-scheduled path; see repro.core.schedule) ---
+    #
+    # A *batch* is a set of same-bucket supernodes from one elimination-tree
+    # level.  ``stage_batch`` stacks their panels into ONE (Bp, Lp, Wp)
+    # device buffer (one host->device transfer), ``factor_batch`` runs ONE
+    # vmapped fused POTRF+TRSM+SYRK dispatch, and ``read_panels_batch`` /
+    # ``syrk_tail_batch`` each bring everything back in ONE bulk transfer.
+    # Pad lanes hold identity diagonal blocks so the math stays exact.
+    def stage_batch(self, Ps: list, ws: list) -> _BatchHandle:
+        B = len(Ps)
+        shapes = {bucket_shape(P.shape[0], w) for P, w in zip(Ps, ws)}
+        if len(shapes) != 1:
+            raise ValueError(f"stage_batch: mixed buckets {sorted(shapes)}")
+        (Lp, Wp), = shapes
+        Bp = _bucket_batch(B)
+        buf = np.zeros((Bp, Lp, Wp), dtype=np.float64)
+        for i, (P, w) in enumerate(zip(Ps, ws)):
+            self._pack_panel(buf[i], P, w, Wp)
+        if Bp > B:  # identity pad lanes: chol(I) = I, zero tails, zero updates
+            idx = np.arange(Wp)
+            buf[B:, idx, idx] = 1.0
+        dev = jax.device_put(buf)
+        self.stats["transfers_in"] += 1
+        self.stats["bytes_in"] += buf.nbytes
+        return _BatchHandle(dev, [P.shape[0] for P in Ps], list(ws), Lp, Wp, B)
+
+    def factor_batch(self, hb: _BatchHandle) -> None:
+        self.stats["device_calls"] += 1
+        Bp = hb.dev.shape[0]
+        hb.dev, hb._u = self._batch_factor_syrk_fn(Bp, hb.Lp, hb.Wp)(hb.dev)
+
+    def read_panels_batch(self, hb: _BatchHandle) -> list:
+        dv = jax.device_get(hb.dev)  # one bulk transfer for the whole batch
+        self.stats["transfers_out"] += 1
+        outs = []
+        for i in range(hb.B):
+            rows, w = hb.rows[i], hb.ws[i]
+            out = np.empty((rows, w), dtype=np.float64)
+            out[:w] = dv[i, :w, :w]
+            out[w:] = dv[i, hb.Wp:hb.Wp + rows - w, :w]
+            self.stats["bytes_out"] += out.nbytes
+            outs.append(out)
+        return outs
+
+    def syrk_tail_batch(self, hb: _BatchHandle) -> list:
+        """Per-supernode update matrices (m x m, lower triangle valid;
+        ``None`` for supernodes with no tail).  One bulk transfer."""
+        if hb._u is None or hb._u.shape[1] == 0:
+            return [None] * hb.B
+        uv = jax.device_get(hb._u)
+        self.stats["transfers_out"] += 1
+        outs = []
+        for i in range(hb.B):
+            m = hb.rows[i] - hb.ws[i]
+            if m == 0:
+                outs.append(None)
+                continue
+            u = uv[i, :m, :m]
+            self.stats["bytes_out"] += u.nbytes
+            outs.append(u)
+        return outs
+
+    def release_batch(self, hb: _BatchHandle) -> None:
+        hb.dev = None
+        hb._u = None
 
     def fetch(self, x) -> np.ndarray:
         """Per-result device->host transfer (RLB v2's per-block mode)."""

@@ -23,7 +23,17 @@ GPU version).  The engine API makes the transfers explicit:
     eng.syrk_block/gemm_block    # RLB: one call per block (pair)
 
 Assembly (the scatter into ancestor panels) always happens on the host, as in
-the paper (OpenMP there, vectorized numpy here).
+the paper (OpenMP there, vectorized numpy here) — through a *scatter plan*
+precomputed in the symbolic phase (repro.core.relind.ScatterPlan): all panels
+live in one flat array (PanelStore) and each supernode's whole update matrix
+is applied with a single fancy-indexed subtraction.
+
+Beyond the paper, ``factorize_levels`` replaces the one-supernode-at-a-time
+offload loop with *level-scheduled batched* execution: supernodes on the same
+supernodal-etree level are independent, so each (level x engine bucket) group
+is staged as one stacked buffer and factored by one vmapped fused
+POTRF+TRSM+SYRK dispatch (see repro.core.schedule and the engines' batched
+protocol: stage_batch / factor_batch / read_panels_batch / syrk_tail_batch).
 """
 from __future__ import annotations
 
@@ -33,7 +43,8 @@ import numpy as np
 import scipy.linalg as sla
 import scipy.sparse as sp
 
-from repro.core.relind import ancestor_updates, supernode_blocks
+from repro.core.relind import ancestor_updates, scatter_plan, supernode_blocks
+from repro.core.schedule import cached_schedule
 from repro.core.symbolic import SymbolicFactor
 
 
@@ -81,6 +92,26 @@ class HostEngine:
         pass
 
     def flush(self) -> None:
+        pass
+
+    # -- batched protocol (level-scheduled path) ---------------------------
+    # Host batches are plain per-item loops over the scalar ops: numerically
+    # identical to the sequential path, and the protocol symmetry lets
+    # factorize_levels treat host and device engines uniformly.
+    def stage_batch(self, Ps: list, ws: list) -> list:
+        return [self.stage(P, w) for P, w in zip(Ps, ws)]
+
+    def factor_batch(self, hs: list) -> None:
+        for h in hs:
+            self.factor(h)
+
+    def read_panels_batch(self, hs: list) -> list:
+        return [self.read_panel(h) for h in hs]
+
+    def syrk_tail_batch(self, hs: list) -> list:
+        return [self.syrk_tail(h) if h[0].shape[0] > h[1] else None for h in hs]
+
+    def release_batch(self, hs: list) -> None:
         pass
 
 
@@ -159,15 +190,14 @@ class CholeskyFactor:
         return x[:, 0] if squeeze else x
 
 
-def init_panels(sym: SymbolicFactor, Aperm: sp.csc_matrix) -> list:
+def _fill_panels(sym: SymbolicFactor, Aperm: sp.csc_matrix, panels: list) -> None:
     """Scatter the (permuted) matrix into zeroed supernode panels (lower part)."""
     Ap, Ai, Ax = Aperm.indptr, Aperm.indices, Aperm.data
-    panels = []
     for s in range(sym.nsuper):
         f = int(sym.super_ptr[s])
         w = sym.width(s)
         r = sym.rows[s]
-        P = np.zeros((r.shape[0], w), dtype=np.float64)
+        P = panels[s]
         for c in range(w):
             j = f + c
             lo, hi = Ap[j], Ap[j + 1]
@@ -175,8 +205,53 @@ def init_panels(sym: SymbolicFactor, Aperm: sp.csc_matrix) -> list:
             keep = rows_j >= j
             pos = np.searchsorted(r, rows_j[keep])
             P[pos, c] = Ax[lo:hi][keep]
-        panels.append(P)
+
+
+def init_panels(sym: SymbolicFactor, Aperm: sp.csc_matrix) -> list:
+    panels = [
+        np.zeros((sym.rows[s].shape[0], sym.width(s)), dtype=np.float64)
+        for s in range(sym.nsuper)
+    ]
+    _fill_panels(sym, Aperm, panels)
     return panels
+
+
+class PanelStore:
+    """All supernode panels in ONE flat float64 array, plus the precomputed
+    scatter plan (repro.core.relind.ScatterPlan).
+
+    ``panels[s]`` is a C-contiguous *view* into ``storage`` — panel code
+    reads/writes it like an ordinary (rows, w) array, while ``scatter``
+    assembles a whole update matrix with a single vectorized fancy-indexed
+    subtraction against the flat storage.  Callers must never rebind a
+    panel, only write into it (``panels[s][...] = ...``).
+    """
+
+    def __init__(self, sym: SymbolicFactor):
+        self.plan = scatter_plan(sym)
+        # one trailing trash cell absorbs the plan's upper-triangle entries
+        self.storage = np.zeros(self.plan.storage_cells, dtype=np.float64)
+        offs = self.plan.offs
+        self.panels = [
+            self.storage[offs[s]:offs[s + 1]].reshape(
+                sym.rows[s].shape[0], sym.width(s)
+            )
+            for s in range(sym.nsuper)
+        ]
+
+    def scatter(self, s: int, U: np.ndarray) -> None:
+        """Apply supernode s's update matrix to every ancestor at once.
+        Destinations are unique (plus the don't-care trash cell), so plain
+        fancy indexing is exact."""
+        dst = self.plan.dst[s]
+        if dst.shape[0]:
+            self.storage[dst] -= U.ravel()
+
+
+def init_panel_store(sym: SymbolicFactor, Aperm: sp.csc_matrix) -> PanelStore:
+    store = PanelStore(sym)
+    _fill_panels(sym, Aperm, store.panels)
+    return store
 
 
 def _pick_engine(engine, device_engine, policy, sym, s, stats):
@@ -198,7 +273,8 @@ def factorize_rl(
     policy: OffloadPolicy | None = None,
 ) -> CholeskyFactor:
     engine = engine or HostEngine()
-    panels = init_panels(sym, Aperm)
+    store = init_panel_store(sym, Aperm)
+    panels = store.panels
     stats = {"method": "rl", "supernodes_on_device": 0, "supernodes_total": sym.nsuper}
 
     for s in range(sym.nsuper):
@@ -206,20 +282,97 @@ def factorize_rl(
         eng = _pick_engine(engine, device_engine, policy, sym, s, stats)
         h = eng.stage(panels[s], w)          # transfer 1: CPU -> device
         eng.factor(h)                        # POTRF + TRSM
-        panels[s] = eng.read_panel(h)        # transfer 2 (async in the paper)
+        out = eng.read_panel(h)              # transfer 2 (async in the paper)
+        if out is not panels[s]:             # HostEngine factors in place
+            panels[s][...] = out
         if sym.rows[s].shape[0] == w:
             eng.release(h)
             continue
         U = np.asarray(eng.syrk_tail(h))     # SYRK; transfer 3: U back to CPU
         eng.release(h)
-        # assembly on the host, as in the paper
-        for upd in ancestor_updates(sym, s):
-            k0, k1 = upd.k0, upd.k1
-            blk = U[k0:, k0:k1].copy()
-            nb = k1 - k0
-            blk[:nb] = np.tril(blk[:nb])  # only the lower triangle lands on
-            # the ancestor's diagonal block
-            panels[upd.anc][upd.rel_rows[:, None], upd.col_off[None, :]] -= blk
+        # assembly on the host, as in the paper — one vectorized scatter per
+        # supernode through the precomputed plan (no per-ancestor loop)
+        store.scatter(s, U)
+    if device_engine is not None:
+        device_engine.flush()
+    return CholeskyFactor(sym=sym, panels=panels, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# level-scheduled batched execution (see repro.core.schedule)
+# ---------------------------------------------------------------------------
+def factorize_levels(
+    sym: SymbolicFactor,
+    Aperm: sp.csc_matrix,
+    *,
+    engine=None,
+    device_engine=None,
+    policy: OffloadPolicy | None = None,
+    max_batch: int = 256,
+) -> CholeskyFactor:
+    """Level-scheduled batched right-looking factorization.
+
+    Supernodes are processed level by level up the supernodal etree (each
+    level is an antichain — see repro.core.schedule), and each level's
+    same-bucket supernodes go through the engines' batched protocol:
+
+        hb = eng.stage_batch(panels, ws)   # ONE transfer per (level, bucket)
+        eng.factor_batch(hb)               # ONE vmapped POTRF+TRSM+SYRK
+        eng.read_panels_batch(hb)          # ONE bulk read-back
+        eng.syrk_tail_batch(hb)            # ONE bulk read-back of updates
+
+    Assembly applies each supernode's precomputed scatter plan (one fancy-
+    indexed subtraction), so host work per supernode is O(1) numpy calls.
+    Uses the RL update-matrix formulation for every supernode; with a device
+    engine this collapses the sequential path's O(nsuper) transfers and
+    dispatches to O(levels x buckets).  Per-level batch statistics are
+    recorded in ``stats["level_stats"]``.
+    """
+    engine = engine or HostEngine()
+    store = init_panel_store(sym, Aperm)
+    panels = store.panels
+    sched = cached_schedule(sym, max_batch=max_batch)
+    stats = {
+        "method": "levels",
+        "supernodes_on_device": 0,
+        "supernodes_total": sym.nsuper,
+        "schedule": sched.batch_stats(),
+        "level_stats": [],
+    }
+
+    for lvl, lgroups in enumerate(sched.groups):
+        lrec = {"level": lvl, "supernodes": 0, "batches": 0, "max_batch": 0,
+                "on_device": 0}
+        for bg in lgroups:
+            if device_engine is not None and policy is not None:
+                on_dev = np.array([policy.on_device(sym, int(s)) for s in bg.ids])
+            else:
+                on_dev = np.zeros(bg.ids.shape[0], dtype=bool)
+            for eng, ids in ((device_engine, bg.ids[on_dev]),
+                             (engine, bg.ids[~on_dev])):
+                if ids.shape[0] == 0:
+                    continue
+                if eng is device_engine:
+                    stats["supernodes_on_device"] += int(ids.shape[0])
+                    lrec["on_device"] += int(ids.shape[0])
+                hb = eng.stage_batch(
+                    [panels[int(s)] for s in ids],
+                    [sym.width(int(s)) for s in ids],
+                )
+                eng.factor_batch(hb)
+                outs = eng.read_panels_batch(hb)
+                us = eng.syrk_tail_batch(hb)
+                eng.release_batch(hb)
+                for s, out, U in zip(ids, outs, us):
+                    s = int(s)
+                    if out is not panels[s]:
+                        panels[s][...] = out
+                    if U is not None:
+                        store.scatter(s, U)
+                lrec["batches"] += 1
+                lrec["max_batch"] = max(lrec["max_batch"], int(ids.shape[0]))
+                lrec["supernodes"] += int(ids.shape[0])
+        stats["level_stats"].append(lrec)
     if device_engine is not None:
         device_engine.flush()
     return CholeskyFactor(sym=sym, panels=panels, stats=stats)

@@ -89,6 +89,87 @@ def supernode_blocks(sym: SymbolicFactor, s: int) -> list[Block]:
     return blocks
 
 
+# ---------------------------------------------------------------------------
+# precomputed scatter plans (RL assembly without per-ancestor Python loops)
+# ---------------------------------------------------------------------------
+@dataclass
+class ScatterPlan:
+    """Flat-index assembly plan for the whole factorization.
+
+    Supernode panels are laid out back to back in one flat float64 storage
+    array: panel ``s`` (``rows_s`` x ``w_s``, C order) occupies
+    ``storage[offs[s]:offs[s+1]]``, and one extra *trash* cell sits at
+    ``storage[trash]`` (``trash == offs[-1]``).
+
+    ``dst[s]`` is a flat int64 array of length ``m*m`` (``m`` = tail rows of
+    ``s``): entry ``i*m + j`` is the storage index the update-matrix entry
+    ``U[i, j]`` must be subtracted from.  Lower-triangle entries (``j <= i``)
+    map into the owning ancestor's panel (row = position of tail row ``i`` in
+    ``rows[anc]``, column = tail row ``j`` minus the ancestor's first column);
+    strict upper-triangle entries map to the trash cell, so the whole update
+    is applied with ONE vectorized fancy-indexed subtraction:
+
+        storage[dst[s]] -= U.ravel()
+
+    Destinations are unique except for the (don't-care) trash cell, which
+    makes plain fancy indexing exact — no ``np.subtract.at`` needed.  The plan
+    depends only on the symbolic factorization and is shared by the
+    sequential (``factorize_rl``) and level-scheduled batched paths.
+    """
+    offs: np.ndarray   # (nsuper+1,) int64 panel offsets into flat storage
+    trash: int         # discard cell index (== offs[-1])
+    dst: list          # per supernode: (m*m,) flat destination indices
+                       # (int32 when storage fits, else int64 — see below)
+
+    @property
+    def storage_cells(self) -> int:
+        return self.trash + 1
+
+
+def build_scatter_plan(sym: SymbolicFactor) -> ScatterPlan:
+    """Precompute the full assembly plan (symbolic phase; O(update entries))."""
+    ns = sym.nsuper
+    offs = np.zeros(ns + 1, dtype=np.int64)
+    for s in range(ns):
+        offs[s + 1] = offs[s] + sym.rows[s].shape[0] * sym.width(s)
+    trash = int(offs[ns])
+    # the plan is as large as every update matrix combined and lives for the
+    # whole symbolic factor — use int32 whenever storage fits (always, short
+    # of ~16 GiB of factor) to halve its footprint
+    idx_t = np.int32 if trash < np.iinfo(np.int32).max else np.int64
+    dst: list = []
+    for s in range(ns):
+        w = sym.width(s)
+        t = sym.rows[s][w:]
+        m = t.shape[0]
+        if m == 0:
+            dst.append(np.empty(0, dtype=idx_t))
+            continue
+        D = np.empty((m, m), dtype=idx_t)
+        k = 0
+        while k < m:  # one segment per ancestor, as in ancestor_updates
+            a = int(sym.snode[t[k]])
+            fa, la = int(sym.super_ptr[a]), int(sym.super_ptr[a + 1])
+            k1 = int(np.searchsorted(t, la))
+            wa = la - fa
+            rel = np.searchsorted(sym.rows[a], t[k:]).astype(np.int64)
+            co = t[k:k1] - fa
+            D[k:, k:k1] = offs[a] + rel[:, None] * wa + co[None, :]
+            k = k1
+        iu = np.triu_indices(m, 1)
+        D[iu] = trash
+        dst.append(D.reshape(-1))
+    return ScatterPlan(offs=offs, trash=trash, dst=dst)
+
+
+def scatter_plan(sym: SymbolicFactor) -> ScatterPlan:
+    """Cached accessor: build once per SymbolicFactor, reuse across
+    factorizations (merge/refine return fresh objects, so no staleness)."""
+    if sym.plan is None:
+        sym.plan = build_scatter_plan(sym)
+    return sym.plan
+
+
 def count_blocks(sym: SymbolicFactor) -> int:
     """Total number of RLB blocks — the quantity partition refinement reduces."""
     return sum(len(supernode_blocks(sym, s)) for s in range(sym.nsuper))

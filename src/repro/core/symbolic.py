@@ -162,6 +162,12 @@ class SymbolicFactor:
     snode: np.ndarray          # (n,): column -> supernode
     sparent: np.ndarray        # supernodal etree parent (-1 for roots)
     colcount: np.ndarray | None = None
+    # lazily-built assembly plan (repro.core.relind.ScatterPlan); cached here
+    # so repeated factorizations with the same symbolic factor reuse it
+    plan: object | None = field(default=None, repr=False, compare=False)
+    # lazily-built level schedules (repro.core.schedule.LevelSchedule),
+    # keyed by (max_batch, cell_budget) — same reuse rationale as ``plan``
+    schedules: dict | None = field(default=None, repr=False, compare=False)
 
     @property
     def nsuper(self) -> int:

@@ -1,6 +1,8 @@
 """Amalgamation + partition-refinement invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from conftest import make_spd

@@ -1,0 +1,143 @@
+"""Level-scheduled batched execution: schedule invariants, numerical
+equivalence with the sequential path, and dispatch/transfer reduction."""
+import numpy as np
+import pytest
+
+from conftest import make_spd
+from repro.core import (
+    DeviceEngine,
+    build_scatter_plan,
+    build_schedule,
+    cholesky,
+    level_sets,
+    supernode_levels,
+    symbolic_pipeline,
+)
+from repro.sparse import elasticity_3d, kkt_like, laplacian_2d, laplacian_3d
+
+GENERATORS = [
+    (laplacian_2d, {"nx": 24}),
+    (laplacian_2d, {"nx": 20, "stencil": 9}),
+    (laplacian_3d, {"nx": 8}),
+    (elasticity_3d, {"nx": 5}),
+    (kkt_like, {"nx": 16}),
+]
+
+
+# ---------------------------------------------------------------------------
+# schedule invariants
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("gen,kw", GENERATORS)
+def test_levels_are_antichains(gen, kw):
+    """No supernode shares a level with its supernodal-etree parent — so a
+    level never contains both a supernode and one of its update targets."""
+    sym, _ = symbolic_pipeline(gen(**kw))
+    lev = supernode_levels(sym.sparent)
+    for s in range(sym.nsuper):
+        p = sym.sparent[s]
+        if p != -1:
+            assert lev[p] > lev[s]
+    # level_sets partitions all supernodes, ascending
+    sets = level_sets(sym.sparent)
+    got = np.sort(np.concatenate(sets))
+    assert np.array_equal(got, np.arange(sym.nsuper))
+
+
+def test_schedule_covers_every_supernode_once():
+    sym, _ = symbolic_pipeline(laplacian_3d(8))
+    sched = build_schedule(sym, max_batch=8)
+    ids = np.sort(np.concatenate(
+        [bg.ids for lg in sched.groups for bg in lg]
+    ))
+    assert np.array_equal(ids, np.arange(sym.nsuper))
+    for lg in sched.groups:
+        for bg in lg:
+            assert bg.ids.shape[0] <= 8  # max_batch respected
+
+
+def test_scatter_plan_destinations_unique():
+    """Apart from the trash cell, every plan destination is distinct, so
+    plain fancy-indexed subtraction (no np.subtract.at) is exact."""
+    sym, _ = symbolic_pipeline(laplacian_3d(7))
+    plan = build_scatter_plan(sym)
+    for s in range(sym.nsuper):
+        real = plan.dst[s][plan.dst[s] != plan.trash]
+        assert np.unique(real).shape[0] == real.shape[0]
+        assert real.min(initial=plan.trash) >= 0
+        assert real.max(initial=-1) < plan.trash
+
+
+# ---------------------------------------------------------------------------
+# numerical equivalence with the sequential path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", ["rl", "rlb"])
+@pytest.mark.parametrize("gen,kw", GENERATORS)
+def test_levels_matches_seq(method, gen, kw):
+    A = gen(**kw)
+    sym, Ap = symbolic_pipeline(A)
+    F_seq = cholesky(A, method=method, schedule="seq", sym=sym, Aperm=Ap)
+    F_lvl = cholesky(A, method=method, schedule="levels", sym=sym, Aperm=Ap)
+    for p1, p2 in zip(F_seq.panels, F_lvl.panels):
+        np.testing.assert_allclose(p1, p2, rtol=1e-10, atol=1e-12)
+    b = np.ones(A.shape[0])
+    x = F_lvl.solve(b)
+    assert np.linalg.norm(A @ x - b) / np.linalg.norm(b) < 1e-9
+
+
+def test_levels_device_matches_and_reduces_dispatches():
+    A = laplacian_3d(10)
+    sym, Ap = symbolic_pipeline(A)
+    F_host = cholesky(A, method="rl", sym=sym, Aperm=Ap)
+
+    eng_seq = DeviceEngine()
+    cholesky(A, method="rl", sym=sym, Aperm=Ap, device_engine=eng_seq)
+    eng_lvl = DeviceEngine()
+    F = cholesky(A, method="rl", schedule="levels", sym=sym, Aperm=Ap,
+                 device_engine=eng_lvl)
+    for p1, p2 in zip(F.panels, F_host.panels):
+        np.testing.assert_allclose(p1, p2, rtol=1e-10, atol=1e-9)
+    assert F.stats["supernodes_on_device"] == sym.nsuper
+    # the acceptance bar: >= 3x fewer host->device transfers and dispatches
+    assert eng_lvl.stats["transfers_in"] * 3 <= eng_seq.stats["transfers_in"]
+    assert eng_lvl.stats["device_calls"] * 3 <= eng_seq.stats["device_calls"]
+    # per-level accounting adds up
+    assert sum(r["supernodes"] for r in F.stats["level_stats"]) == sym.nsuper
+
+
+def test_levels_mixed_offload_threshold():
+    """Threshold policy splits each batch between host and device engines."""
+    A = laplacian_3d(9)
+    sym, Ap = symbolic_pipeline(A)
+    F_host = cholesky(A, method="rl", sym=sym, Aperm=Ap)
+    eng = DeviceEngine()
+    F = cholesky(A, method="rl", schedule="levels", sym=sym, Aperm=Ap,
+                 device_engine=eng, offload_threshold=3000)
+    for p1, p2 in zip(F.panels, F_host.panels):
+        np.testing.assert_allclose(p1, p2, rtol=1e-10, atol=1e-9)
+    assert 0 < F.stats["supernodes_on_device"] < sym.nsuper
+
+
+def test_levels_pallas_backend_small():
+    A = make_spd(60, 0.08, 4)
+    sym, Ap = symbolic_pipeline(A)
+    F_host = cholesky(A, method="rl", sym=sym, Aperm=Ap)
+    eng = DeviceEngine(backend="pallas")
+    F = cholesky(A, method="rl", schedule="levels", sym=sym, Aperm=Ap,
+                 device_engine=eng)
+    for p1, p2 in zip(F.panels, F_host.panels):
+        np.testing.assert_allclose(p1, p2, rtol=1e-9, atol=1e-8)
+
+
+def test_engine_jit_cache_is_per_instance():
+    """Compiled programs live on the engine instance (no lru_cache pinning
+    ``self`` in a global cache) and are rebuilt per engine."""
+    import gc
+    import weakref
+
+    eng = DeviceEngine()
+    eng._factor_fn(128, 64)
+    assert ("factor", 128, 64) in eng._programs
+    ref = weakref.ref(eng)
+    del eng
+    gc.collect()
+    assert ref() is None  # engine (and its jit cache) is collectable

@@ -4,6 +4,8 @@ cancellation has probability zero)."""
 import numpy as np
 import pytest
 import scipy.sparse as sp
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from conftest import make_spd
