@@ -65,12 +65,14 @@ def run_suite(names=None, *, rl_threshold=RL_THRESHOLD, rlb_threshold=RLB_THRESH
         t, F = _time(lambda: cholesky(A, method="rlb", sym=sym, Aperm=Aperm))
         rec["rlb_cpu_s"] = t
 
-        # device-offloaded runs (warm the engine's jit cache first)
+        # device-offloaded runs (warm the engine's jit cache first); the
+        # paper tables measure the sequential offload loop, so pin
+        # schedule="seq" (the default with an engine is now "levels")
         eng = DeviceEngine()
-        cholesky(A, method="rl", sym=sym, Aperm=Aperm,
+        cholesky(A, method="rl", sym=sym, Aperm=Aperm, schedule="seq",
                  device_engine=eng, offload_threshold=rl_threshold)
         t, F = _time(lambda: cholesky(A, method="rl", sym=sym, Aperm=Aperm,
-                                      device_engine=eng,
+                                      schedule="seq", device_engine=eng,
                                       offload_threshold=rl_threshold))
         rec["rl_gpu_s"] = t
         rec["rl_ondev"] = F.stats["supernodes_on_device"]
@@ -79,10 +81,11 @@ def run_suite(names=None, *, rl_threshold=RL_THRESHOLD, rlb_threshold=RLB_THRESH
             rec["rl_gpu_resid"] = float(np.linalg.norm(A @ x - b) / np.linalg.norm(b))
 
         eng2 = DeviceEngine()
-        cholesky(A, method="rlb", sym=sym, Aperm=Aperm, device_engine=eng2,
-                 offload_threshold=rlb_threshold, batch_transfers=True)
+        cholesky(A, method="rlb", sym=sym, Aperm=Aperm, schedule="seq",
+                 device_engine=eng2, offload_threshold=rlb_threshold,
+                 batch_transfers=True)
         t, F = _time(lambda: cholesky(A, method="rlb", sym=sym, Aperm=Aperm,
-                                      device_engine=eng2,
+                                      schedule="seq", device_engine=eng2,
                                       offload_threshold=rlb_threshold,
                                       batch_transfers=True))
         rec["rlb_gpu_s"] = t
@@ -98,14 +101,16 @@ def run_suite(names=None, *, rl_threshold=RL_THRESHOLD, rlb_threshold=RLB_THRESH
 
 
 def run_schedule_compare(names=None, *, verify: bool = True):
-    """Sequential vs level-scheduled batched execution, full offload.
+    """Sequential vs level-scheduled batched vs device-resident execution.
 
-    Both runs push EVERY supernode through the same DeviceEngine (no size
-    threshold), so the comparison isolates the scheduling change: the
-    level-scheduled path stacks each (etree level x engine bucket) group
-    into one vmapped dispatch, collapsing O(nsuper) transfers/dispatches to
-    O(levels x buckets).  Returns one dict per matrix with times, engine
-    counters, and reduction ratios.
+    All three runs push EVERY supernode through the same DeviceEngine (no
+    size threshold), so the comparison isolates the scheduling/residency
+    changes: the level-scheduled path (PR 1, host assembly) stacks each
+    (etree level x engine bucket) group into one vmapped dispatch, collapsing
+    O(nsuper) transfers/dispatches to O(levels x buckets); the
+    device-resident path (assembly on the device) collapses the transfers
+    further to O(1) — stage once, read the factor back once.  Returns one
+    dict per matrix with times, engine counters, and reduction ratios.
     """
     names = names or list(MATRIX_SUITE)
     rows = []
@@ -116,54 +121,120 @@ def run_schedule_compare(names=None, *, verify: bool = True):
         b = np.ones(n)
 
         eng_seq = DeviceEngine()
-        cholesky(A, method="rl", sym=sym, Aperm=Aperm, device_engine=eng_seq)
+        cholesky(A, method="rl", schedule="seq", sym=sym, Aperm=Aperm,
+                 device_engine=eng_seq)
         eng_seq.stats = {k: 0 for k in eng_seq.stats}  # count the timed run only
-        t_seq, _ = _time(lambda: cholesky(A, method="rl", sym=sym, Aperm=Aperm,
+        t_seq, _ = _time(lambda: cholesky(A, method="rl", schedule="seq",
+                                          sym=sym, Aperm=Aperm,
                                           device_engine=eng_seq))
 
         eng_lvl = DeviceEngine()
-        cholesky(A, method="rl", schedule="levels", sym=sym, Aperm=Aperm,
-                 device_engine=eng_lvl)
+        cholesky(A, method="rl", schedule="levels", assembly="host",
+                 sym=sym, Aperm=Aperm, device_engine=eng_lvl)
         eng_lvl.stats = {k: 0 for k in eng_lvl.stats}
         t_lvl, F = _time(lambda: cholesky(A, method="rl", schedule="levels",
-                                          sym=sym, Aperm=Aperm,
+                                          assembly="host", sym=sym, Aperm=Aperm,
                                           device_engine=eng_lvl))
+
+        eng_dev = DeviceEngine()
+        cholesky(A, method="rl", schedule="levels", sym=sym, Aperm=Aperm,
+                 device_engine=eng_dev)
+        eng_dev.stats = {k: 0 for k in eng_dev.stats}
+        t_dev, Fd = _time(lambda: cholesky(A, method="rl", schedule="levels",
+                                           sym=sym, Aperm=Aperm,
+                                           device_engine=eng_dev))
 
         rec = {
             "matrix": name, "n": n, "nsuper": sym.nsuper,
-            "seq_s": t_seq, "levels_s": t_lvl,
+            "seq_s": t_seq, "levels_s": t_lvl, "device_s": t_dev,
             "seq_transfers_in": eng_seq.stats["transfers_in"],
             "levels_transfers_in": eng_lvl.stats["transfers_in"],
+            "device_transfers_in": eng_dev.stats["transfers_in"],
+            "device_transfers_out": eng_dev.stats["transfers_out"],
             "seq_device_calls": eng_seq.stats["device_calls"],
             "levels_device_calls": eng_lvl.stats["device_calls"],
+            "device_device_calls": eng_dev.stats["device_calls"],
             "transfers_in_ratio":
                 eng_seq.stats["transfers_in"] / max(1, eng_lvl.stats["transfers_in"]),
             "device_calls_ratio":
                 eng_seq.stats["device_calls"] / max(1, eng_lvl.stats["device_calls"]),
+            "device_vs_levels_speedup": t_lvl / t_dev,
             "levels": F.stats["schedule"]["levels"],
             "batches": F.stats["schedule"]["batches"],
         }
+        assert Fd.stats["assembly"] == "device"
         if verify:
             x = F.solve(b)
             rec["levels_resid"] = float(np.linalg.norm(A @ x - b) / np.linalg.norm(b))
+            xd = Fd.solve(b)
+            rec["device_resid"] = float(np.linalg.norm(A @ xd - b) / np.linalg.norm(b))
         rows.append(rec)
     return rows
 
 
+def run_solve_compare(names=None, *, rhs_counts=(1, 64), verify: bool = True):
+    """Host per-supernode solve loop vs device level-scheduled batched solve.
+
+    The factor comes from one device-resident ``schedule="levels"``
+    factorization, so the device solve reuses the factor already on the
+    accelerator (no re-staging; the timed solve pays one RHS upload and one
+    solution download).  Returns one dict per (matrix, nrhs) pair.
+    """
+    names = names or list(MATRIX_SUITE)
+    rows = []
+    for name in names:
+        A = make_suite_matrix(name)
+        sym, Aperm = symbolic_pipeline(A)
+        n = A.shape[0]
+        eng = DeviceEngine()
+        F = cholesky(A, sym=sym, Aperm=Aperm, device_engine=eng)
+        for k in rhs_counts:
+            b = np.random.default_rng(0).standard_normal((n, k))
+            t_host, x_h = _time(lambda: F.solve(b))
+            F.solve(b, backend="device")  # warm the solve programs
+            t_dev, x_d = _time(lambda: F.solve(b, backend="device"))
+            rec = {
+                "matrix": name, "n": n, "nsuper": sym.nsuper, "nrhs": k,
+                "host_solve_s": t_host, "device_solve_s": t_dev,
+                "solve_speedup": t_host / t_dev,
+            }
+            if verify:
+                nb = np.linalg.norm(b)
+                rec["host_solve_resid"] = float(np.linalg.norm(A @ x_h - b) / nb)
+                rec["device_solve_resid"] = float(np.linalg.norm(A @ x_d - b) / nb)
+            rows.append(rec)
+    return rows
+
+
+def table_solve(rows) -> str:
+    """Host loop vs device level-scheduled batched solve."""
+    out = ["matrix,n,nsuper,nrhs,host_solve_s,device_solve_s,speedup,resid"]
+    for r in rows:
+        out.append(
+            f"{r['matrix']},{r['n']},{r['nsuper']},{r['nrhs']},"
+            f"{r['host_solve_s']:.4f},{r['device_solve_s']:.4f},"
+            f"{r['solve_speedup']:.2f},"
+            f"{r.get('device_solve_resid', float('nan')):.2e}"
+        )
+    return "\n".join(out)
+
+
 def table_schedule(rows) -> str:
-    """Seq vs level-scheduled batched execution (full offload)."""
-    out = ["matrix,n,nsuper,levels,batches,seq_s,levels_s,"
-           "transfers_in_seq,transfers_in_levels,transfers_in_ratio,"
-           "device_calls_seq,device_calls_levels,device_calls_ratio,resid"]
+    """Seq vs level-scheduled (host assembly) vs device-resident execution."""
+    out = ["matrix,n,nsuper,levels,batches,seq_s,levels_s,device_s,"
+           "dev_vs_levels_speedup,"
+           "transfers_in_seq,transfers_in_levels,transfers_in_device,"
+           "device_calls_seq,device_calls_levels,device_calls_device,resid"]
     for r in rows:
         out.append(
             f"{r['matrix']},{r['n']},{r['nsuper']},{r['levels']},{r['batches']},"
-            f"{r['seq_s']:.3f},{r['levels_s']:.3f},"
+            f"{r['seq_s']:.3f},{r['levels_s']:.3f},{r['device_s']:.3f},"
+            f"{r['device_vs_levels_speedup']:.2f},"
             f"{r['seq_transfers_in']},{r['levels_transfers_in']},"
-            f"{r['transfers_in_ratio']:.1f},"
+            f"{r['device_transfers_in']},"
             f"{r['seq_device_calls']},{r['levels_device_calls']},"
-            f"{r['device_calls_ratio']:.1f},"
-            f"{r.get('levels_resid', float('nan')):.2e}"
+            f"{r['device_device_calls']},"
+            f"{r.get('device_resid', float('nan')):.2e}"
         )
     return "\n".join(out)
 

@@ -69,6 +69,30 @@ def bench_schedule(suite) -> dict:
     return {"rows": rows, "max_resid": resid}
 
 
+def bench_solve(suite) -> dict:
+    """Host per-supernode solve loop vs device level-scheduled batched solve
+    (RHS blocks of 1 and 64; see core/device_store.py).  Emits
+    results/BENCH_solve.json alongside BENCH_cholesky.json."""
+    import time
+    from benchmarks import cholesky_tables as ct
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    rows = []
+    for name in suite:
+        t0 = time.time()
+        rows.extend(ct.run_solve_compare([name]))
+        print(f"# done solve {name} in {time.time() - t0:.0f}s", flush=True)
+    print("\n# Solve — host loop vs device level-scheduled batched (RHS 1 / 64)")
+    print(ct.table_solve(rows))
+    resid = _max_resid(rows)
+    if resid is not None:
+        print(f"# solve residual sanity: max {resid:.3e}")
+    bench = {"rows": rows, "max_resid": resid}
+    out = RESULTS / "BENCH_solve.json"
+    out.write_text(json.dumps(bench, indent=2))
+    print(f"# machine-readable solve results -> {out}")
+    return bench
+
+
 def bench_kernels() -> None:
     from benchmarks import kernel_bench
     print("\n# Kernels — name,us_per_call,derived")
@@ -106,7 +130,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    choices=[None, "cholesky", "schedule", "kernels", "roofline"])
+                    choices=[None, "cholesky", "schedule", "solve", "kernels",
+                             "roofline"])
     args = ap.parse_args()
 
     if args.quick:
@@ -124,6 +149,9 @@ def main() -> None:
         # the schedule comparison offloads everything, so stick to the quick
         # suite unless a full run was explicitly requested
         bench["schedule"] = bench_schedule(suite if args.full else QUICK_SUITE)
+    if args.only in (None, "solve"):
+        # same full-offload rationale as the schedule comparison
+        bench_solve(suite if args.full else QUICK_SUITE)
     if bench:
         RESULTS.mkdir(parents=True, exist_ok=True)
         out = RESULTS / "BENCH_cholesky.json"

@@ -24,7 +24,7 @@ A.sort_indices()
 
 print(f"operator: n={n}, nnz={A.nnz}")
 t0 = time.time()
-F = cholesky(A, method="rlb", device_engine=DeviceEngine(),
+F = cholesky(A, method="rlb", schedule="seq", device_engine=DeviceEngine(),
              offload_threshold=30_000, batch_transfers=True)
 print(f"factorization: {time.time() - t0:.2f}s "
       f"(on-device supernodes: {F.stats['supernodes_on_device']})")

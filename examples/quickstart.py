@@ -29,31 +29,51 @@ t_rl = time.time() - t0
 x = F.solve(b)
 print(f"RL  (host)    {t_rl:6.2f}s  resid={np.linalg.norm(A @ x - b) / np.linalg.norm(b):.2e}")
 
-# RL with large supernodes offloaded to the accelerator (the paper's method)
+# RL with large supernodes offloaded to the accelerator (the paper's method;
+# schedule="seq" is the paper-faithful one-supernode-at-a-time loop — with a
+# device engine the default is now the level-scheduled path below)
 eng = DeviceEngine()
-cholesky(A, method="rl", sym=sym, Aperm=Aperm, device_engine=eng,
-         offload_threshold=20_000)  # warm the kernel cache
+cholesky(A, method="rl", schedule="seq", sym=sym, Aperm=Aperm,
+         device_engine=eng, offload_threshold=20_000)  # warm the kernel cache
 t0 = time.time()
-F = cholesky(A, method="rl", sym=sym, Aperm=Aperm, device_engine=eng,
-             offload_threshold=20_000)
+F = cholesky(A, method="rl", schedule="seq", sym=sym, Aperm=Aperm,
+             device_engine=eng, offload_threshold=20_000)
 t_gpu = time.time() - t0
 x = F.solve(b)
 print(f"RL  (offload) {t_gpu:6.2f}s  resid={np.linalg.norm(A @ x - b) / np.linalg.norm(b):.2e}  "
       f"supernodes on device: {F.stats['supernodes_on_device']}/{F.stats['supernodes_total']}")
 
-# Level-scheduled batched offload (beyond-paper): independent supernodes on
-# the same elimination-tree level are stacked per engine bucket and factored
-# by ONE vmapped POTRF+TRSM+SYRK dispatch per group
+# Device-resident level scheduling (beyond-paper, the default with a device
+# engine): independent supernodes on the same elimination-tree level are
+# stacked per engine bucket and factored by ONE vmapped POTRF+TRSM+SYRK
+# dispatch per group, with assembly running ON the device scatter-free
+# (pooled update entries applied at gather time via prefix-sum segment
+# sums) — O(1) host<->device transfers for the whole numeric phase (stage
+# once, read the factor back once)
 eng2 = DeviceEngine()
-cholesky(A, schedule="levels", sym=sym, Aperm=Aperm, device_engine=eng2)
+cholesky(A, sym=sym, Aperm=Aperm, device_engine=eng2)
 eng2.stats = {k: 0 for k in eng2.stats}
 t0 = time.time()
-F = cholesky(A, schedule="levels", sym=sym, Aperm=Aperm, device_engine=eng2)
+F = cholesky(A, sym=sym, Aperm=Aperm, device_engine=eng2)
 t_lvl = time.time() - t0
 x = F.solve(b)
-print(f"RL  (levels)  {t_lvl:6.2f}s  resid={np.linalg.norm(A @ x - b) / np.linalg.norm(b):.2e}  "
+print(f"RL  (device)  {t_lvl:6.2f}s  resid={np.linalg.norm(A @ x - b) / np.linalg.norm(b):.2e}  "
       f"levels={F.stats['schedule']['levels']}  batches={F.stats['schedule']['batches']}  "
       f"transfers_in={eng2.stats['transfers_in']} (seq would be {sym.nsuper})")
+
+# The factor is still resident on the device, so the solve phase can run
+# there too: level-scheduled batched forward/backward substitution, one
+# vmapped TRSM + gathered GEMM update per (level x bucket) group
+B = np.sin(np.arange(n)[:, None] * 0.01 + np.arange(64)[None, :])
+t0 = time.time()
+X = F.solve(B)
+t_host = time.time() - t0
+F.solve(B, backend="device")  # warm the solve programs
+t0 = time.time()
+X_dev = F.solve(B, backend="device")
+t_dev = time.time() - t0
+print(f"solve 64 RHS  host {t_host:6.2f}s  device {t_dev:6.2f}s  "
+      f"({t_host / t_dev:.1f}x)  max|dx|={np.abs(X - X_dev).max():.2e}")
 
 # RLB: blocked updates, no update-matrix storage (factors bigger problems)
 t0 = time.time()

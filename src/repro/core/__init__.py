@@ -8,7 +8,13 @@ import jax as _jax
 _jax.config.update("jax_enable_x64", True)
 
 from repro.core.api import cholesky, solve, symbolic_pipeline
-from repro.core.engines import DeviceEngine, bucket_shape
+from repro.core.device_store import (
+    DevicePanelStore,
+    build_device_plan,
+    device_plan,
+    device_solve,
+)
+from repro.core.engines import DeviceEngine, bucket_shape, bucket_shape_batch
 from repro.core.merge import merge_supernodes
 from repro.core.numeric import (
     CholeskyFactor,
@@ -54,7 +60,8 @@ __all__ = [
     "init_panel_store", "init_panels",
     "ancestor_updates", "build_scatter_plan", "count_blas_calls",
     "count_blocks", "scatter_plan", "supernode_blocks",
-    "DeviceEngine", "bucket_shape",
+    "DevicePanelStore", "build_device_plan", "device_plan", "device_solve",
+    "DeviceEngine", "bucket_shape", "bucket_shape_batch",
     "LevelSchedule", "build_schedule", "cached_schedule", "level_sets",
     "supernode_levels",
     "SymbolicFactor", "col_counts", "etree", "find_supernodes", "postorder",

@@ -57,8 +57,9 @@ def cholesky(
     device_engine=None,
     offload_threshold: int | None = None,
     batch_transfers: bool = False,
-    schedule: str = "seq",
+    schedule: str | None = None,
     max_batch: int = 256,
+    assembly: str = "auto",
     sym: SymbolicFactor | None = None,
     Aperm: sp.csc_matrix | None = None,
 ) -> CholeskyFactor:
@@ -77,13 +78,46 @@ def cholesky(
                       levels x engine buckets run as single vmapped
                       dispatches — see repro.core.schedule).  'levels' uses
                       the RL update-matrix formulation for either method.
+                      Default (None): 'levels' whenever a device engine is
+                      passed, 'seq' otherwise.  NOTE: with a device engine,
+                      method='rlb' therefore also runs the RL formulation
+                      (and its update-matrix storage) unless schedule='seq'
+                      is pinned; batch_transfers with schedule='levels' is
+                      rejected rather than silently ignored.
     max_batch         'levels' only: max supernodes stacked per dispatch
+    assembly          'levels' only: 'auto' (device-resident assembly on full
+                      offload — O(1) host<->device transfers total, and the
+                      factor stays on the device for solve(backend='device')),
+                      'host' (always assemble on the host), or 'device'
+                      (force device residency; see repro.core.device_store)
     sym / Aperm       reuse a precomputed symbolic factorization
     """
     if method not in ("rl", "rlb"):
         raise ValueError(f"unknown method {method!r} (want 'rl' or 'rlb')")
+    if schedule is None:
+        schedule = "levels" if device_engine is not None else "seq"
     if schedule not in ("seq", "levels"):
         raise ValueError(f"unknown schedule {schedule!r} (want 'seq' or 'levels')")
+    if assembly not in ("auto", "host", "device"):
+        raise ValueError(
+            f"unknown assembly {assembly!r} (want 'auto', 'host', or 'device')"
+        )
+    if assembly == "device" and device_engine is None:
+        raise ValueError("assembly='device' requires a device engine")
+    if assembly != "auto" and schedule == "seq":
+        raise ValueError(
+            f"assembly={assembly!r} only applies to schedule='levels' "
+            "(the sequential paths always assemble on the host)"
+        )
+    if batch_transfers and schedule == "levels":
+        # loud, not silent: batch_transfers tunes the sequential RLB loop,
+        # which the levels schedule (RL formulation) never runs.  This also
+        # catches rlb+engine callers relying on the old 'seq' default.
+        raise ValueError(
+            "batch_transfers applies only to the sequential RLB path; "
+            "pass schedule='seq' (with a device engine the default is "
+            "now 'levels')"
+        )
     if sym is None or Aperm is None:
         sym, Aperm = symbolic_pipeline(
             A, ordering=ordering, merge=merge, refine=refine, max_growth=max_growth
@@ -94,7 +128,7 @@ def cholesky(
     if schedule == "levels":
         return factorize_levels(
             sym, Aperm, engine=HostEngine(), device_engine=device_engine,
-            policy=policy, max_batch=max_batch,
+            policy=policy, max_batch=max_batch, assembly=assembly,
         )
     if method == "rl":
         return factorize_rl(
@@ -106,5 +140,9 @@ def cholesky(
     )
 
 
-def solve(A: sp.spmatrix, b: np.ndarray, **kw) -> np.ndarray:
-    return cholesky(A, **kw).solve(b)
+def solve(A: sp.spmatrix, b: np.ndarray, *, solve_backend: str = "host",
+          **kw) -> np.ndarray:
+    """Factor-and-solve convenience wrapper.  ``solve_backend`` picks the
+    substitution path ('host' loop or 'device' level-scheduled batched —
+    see CholeskyFactor.solve); every other kwarg goes to ``cholesky``."""
+    return cholesky(A, **kw).solve(b, backend=solve_backend)

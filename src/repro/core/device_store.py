@@ -1,0 +1,428 @@
+"""Device-resident factorization state: DevicePanelStore + batch index plans.
+
+The host PanelStore keeps the whole factor in ONE flat float64 array and
+assembles update matrices with precomputed flat-index scatters
+(repro.core.relind.ScatterPlan).  This module moves the numeric phase onto
+the accelerator: the initial storage is staged once, every per-batch
+operation of the level-scheduled factorization — panel gather, update
+application, fused POTRF+TRSM+SYRK, result packing — runs as jitted device
+programs, and the finished factor comes back in one transfer.  A
+factorization costs O(1) host<->device transfers total instead of one round
+trip per (level x bucket) group, and the device-resident factor serves
+``CholeskyFactor.solve(b, backend="device")`` without re-staging.
+
+Scatter-free assembly (fan-in)
+------------------------------
+XLA lowers element scatter to a serial loop (slow on CPU, poor on TPU), so
+the device path never scatters into the flat factor.  Instead it exploits
+two structural facts of level-scheduled right-looking factorization:
+
+  * a panel's storage cells are READ exactly once — when its own group is
+    gathered for factoring (updates target only strictly later levels, and
+    factored panels are only consumed by the final read-back / solve);
+  * every update entry's destination is known symbolically.
+
+So update matrices go to a preallocated device *pool* (packed real entries,
+one contiguous ``dynamic_update_slice`` per group), and when a group is
+gathered its pending contributions are applied by the prefix-sum trick: with
+the incoming pool entries gathered in destination order, the per-cell sums
+are ``C[hi] - C[lo]`` of the running sum — gathers only.  Factored panels
+are packed per group (a gather) and concatenated once into the contiguous
+device factor the solve programs index.
+
+Precision caveat: a segment sum recovered as a difference of prefixes
+carries absolute error proportional to the running total's magnitude, not
+the segment's, so update entries whose magnitudes differ by many orders
+within one group's incoming slice (badly scaled mixed-unit systems) lose
+accuracy relative to direct per-segment summation.  On the benchmark suite
+this costs ~one digit of residual (4e-13 -> ~2e-12); exact segmented or
+compensated summation for ill-scaled inputs is a ROADMAP follow-up —
+pre-scale such systems (e.g. Jacobi/diagonal equilibration) in the
+meantime.
+
+Index plans
+-----------
+For each schedule BatchGroup (level, bucket (Lp, Wp), supernode ids, B lanes
+padded to Bp) the plan precomputes, all host-side and cached on the
+LevelSchedule:
+
+    cells (r,)        flat-storage index of each real panel cell, packed in
+                      (lane, row, col) order (ascending, one contiguous run
+                      per lane)
+    src (n,)          pool position of every incoming update entry, sorted
+                      by destination packed cell
+    lo / hi (r,)      segment bounds of each packed cell's contributions
+    gidx (Bp,Lp,Wp)   index into the zero/one-extended packed vector that
+                      reproduces the stacked padded panel buffer (pad cells
+                      -> the zero cell r, identity diagonals -> the one cell
+                      r+1)
+    ppack (r,)        position in the factored (Bp,Lp,Wp) buffer of each
+                      real cell (packs the factored panels)
+    upack (n_out,)    position in the (Bp,mp,mp) update buffer of each real
+                      lower-triangle update entry, in pool order
+    cols (Bp,Wp)      solve: global RHS row of each supernode column
+                      (pad -> the RHS trash row at index n)
+    tails (Bp,mp)     solve: global RHS row of each tail row (pad -> trash)
+    base              offset of this group's packed cells in the
+                      concatenated device factor
+
+Correctness of whole-batch application rests on the schedule: levels are
+antichains of the supernodal etree, so every contribution to a group is in
+the pool before the group runs, and the same argument makes the
+level-scheduled triangular solves exact (forward writes each supernode's
+RHS rows once and pushes updates only to later levels; backward reads only
+rows finalized by earlier, higher-level steps).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engines import _bucket_batch
+from repro.core.relind import scatter_plan
+from repro.core.schedule import LevelSchedule
+from repro.core.symbolic import SymbolicFactor
+
+
+@dataclass
+class GroupIndices:
+    """Host-side index arrays for one schedule BatchGroup (see module doc)."""
+    level: int
+    Lp: int
+    Wp: int
+    B: int
+    Bp: int
+    base: int
+    off: int               # this group's slice start in the update pool
+    cells: np.ndarray      # (r,)
+    src: np.ndarray        # (n,)
+    lo: np.ndarray         # (r,)
+    hi: np.ndarray         # (r,)
+    gidx: np.ndarray       # (Bp, Lp, Wp)
+    ppack: np.ndarray      # (r,)
+    upack: np.ndarray      # (n_out,)
+    cols: np.ndarray       # (Bp, Wp)
+    tails: np.ndarray      # (Bp, Lp-Wp)
+
+
+@dataclass
+class DeviceGroupPlan:
+    """All GroupIndices of a schedule plus the global layouts."""
+    groups: list            # list[list[GroupIndices]], same shape as sched.groups
+    cells_concat: np.ndarray  # (packed_total,) factor cell of every packed slot
+    packed_total: int       # == total real factor cells
+    pool_size: int          # total real update entries
+
+
+def build_device_plan(sym: SymbolicFactor, sched: LevelSchedule) -> DeviceGroupPlan:
+    """Precompute every group's index arrays (symbolic phase; O(padded factor
+    cells + update entries))."""
+    plan = scatter_plan(sym)
+    offs = plan.offs
+    n = sym.n
+    packed_total = int(offs[-1])
+    # src entries index the update pool, which is usually LARGER than the
+    # packed factor — size the index dtype for both
+    pool_total = sum(
+        m * (m + 1) // 2
+        for m in (sym.rows[s].shape[0] - sym.width(s) for s in range(sym.nsuper))
+    )
+    idx_t = (np.int32
+             if max(packed_total, pool_total) < np.iinfo(np.int32).max
+             else np.int64)
+
+    # pass 1: per-supernode placement (group id, packed base of its lane)
+    flat_groups = [bg for lg in sched.groups for bg in lg]
+    gid_of_super = np.empty(sym.nsuper, dtype=np.int64)
+    packed_start = np.empty(sym.nsuper, dtype=np.int64)  # global packed base
+    group_base = np.zeros(len(flat_groups) + 1, dtype=np.int64)
+    pos = 0
+    for gi, bg in enumerate(flat_groups):
+        group_base[gi] = pos
+        for s in bg.ids:
+            s = int(s)
+            gid_of_super[s] = gi
+            packed_start[s] = pos
+            pos += sym.rows[s].shape[0] * sym.width(s)
+    group_base[-1] = pos
+    assert pos == packed_total
+
+    # pass 2: pool layout + every update entry's destination (packed slot)
+    pool_off = np.zeros(len(flat_groups) + 1, dtype=np.int64)
+    dest_gid: list = []
+    dest_pos: list = []
+    for gi, bg in enumerate(flat_groups):
+        cnt = 0
+        for s in bg.ids:
+            s = int(s)
+            w = sym.width(s)
+            m = sym.rows[s].shape[0] - w
+            if m == 0:
+                continue
+            il, jl = np.tril_indices(m)
+            dcell = plan.dst[s].reshape(m, m)[il, jl].astype(np.int64)
+            # destination supernode of each entry -> its packed slot
+            a = np.searchsorted(offs, dcell, side="right") - 1
+            dest_gid.append(gid_of_super[a])
+            dest_pos.append(packed_start[a] + (dcell - offs[a]))
+            cnt += il.shape[0]
+        pool_off[gi + 1] = pool_off[gi] + cnt
+    pool_size = int(pool_off[-1])
+    dest_gid = np.concatenate(dest_gid) if dest_gid else np.empty(0, np.int64)
+    dest_pos = np.concatenate(dest_pos) if dest_pos else np.empty(0, np.int64)
+    # incoming entries of each group, sorted by destination packed slot
+    order = np.lexsort((dest_pos, dest_gid))
+    sorted_gid = dest_gid[order]
+    sorted_pos = dest_pos[order]
+    grp_lo = np.searchsorted(sorted_gid, np.arange(len(flat_groups)))
+    grp_hi = np.searchsorted(sorted_gid, np.arange(len(flat_groups)), side="right")
+
+    # pass 3: per-group index arrays
+    out: list = []
+    gi = 0
+    cells_concat = np.empty(packed_total, dtype=np.int64)
+    for lgroups in sched.groups:
+        lvl_out = []
+        for bg in lgroups:
+            Lp, Wp = bg.Lp, bg.Wp
+            mp = Lp - Wp
+            B = int(bg.ids.shape[0])
+            Bp = _bucket_batch(B)
+            base = int(group_base[gi])
+            r = int(group_base[gi + 1] - base)
+            gidx = np.full((Bp, Lp, Wp), r, dtype=idx_t)      # r = the zero cell
+            d = np.arange(Wp)
+            gidx[B:, d, d] = r + 1                             # pad lanes: identity
+            cols = np.full((Bp, Wp), n, dtype=idx_t)
+            tails = np.full((Bp, mp), n, dtype=idx_t)
+            cells = np.empty(r, dtype=idx_t)
+            ppack = np.empty(r, dtype=idx_t)
+            upacks = []
+            p = 0
+            for i, s in enumerate(bg.ids):
+                s = int(s)
+                w = sym.width(s)
+                f = int(sym.super_ptr[s])
+                rows = sym.rows[s]
+                m = rows.shape[0] - w
+                sz = rows.shape[0] * w
+                cells[p:p + sz] = offs[s] + np.arange(sz)
+                # padded row of each real row: diag rows stay, tail rows jump
+                # past the identity extension
+                prow = np.concatenate(
+                    [np.arange(w), np.arange(Wp, Wp + m)]
+                )
+                cgrid = np.arange(w)
+                pp = ((i * Lp + prow)[:, None] * Wp + cgrid).ravel()
+                ppack[p:p + sz] = pp
+                gidx.reshape(-1)[pp] = p + np.arange(sz)
+                dd = np.arange(w, Wp)
+                gidx[i, dd, dd] = r + 1
+                cols[i, :w] = f + np.arange(w)
+                if m:
+                    tails[i, :m] = rows[w:]
+                    il, jl = np.tril_indices(m)
+                    upacks.append(i * mp * mp + il * mp + jl)
+                p += sz
+            cells_concat[base:base + r] = cells
+            upack = (np.concatenate(upacks).astype(idx_t)
+                     if upacks else np.empty(0, dtype=idx_t))
+            src = order[grp_lo[gi]:grp_hi[gi]].astype(idx_t)
+            pp_in = sorted_pos[grp_lo[gi]:grp_hi[gi]] - base
+            counts = np.bincount(pp_in, minlength=r)
+            hi = np.cumsum(counts).astype(idx_t)
+            lo = (hi - counts).astype(idx_t)
+            lvl_out.append(GroupIndices(
+                level=bg.level, Lp=Lp, Wp=Wp, B=B, Bp=Bp,
+                base=base, off=int(pool_off[gi]),
+                cells=cells, src=src, lo=lo, hi=hi, gidx=gidx,
+                ppack=ppack, upack=upack, cols=cols, tails=tails,
+            ))
+            gi += 1
+        out.append(lvl_out)
+    return DeviceGroupPlan(
+        groups=out, cells_concat=cells_concat,
+        packed_total=packed_total, pool_size=pool_size,
+    )
+
+
+def device_plan(sym: SymbolicFactor, sched: LevelSchedule) -> DeviceGroupPlan:
+    """Cached accessor mirroring ``relind.scatter_plan``: built once per
+    LevelSchedule (itself cached per SymbolicFactor), reused across
+    factorizations and solves."""
+    if sched.device_plan is None:
+        sched.device_plan = build_device_plan(sym, sched)
+    return sched.device_plan
+
+
+class _DevGroup:
+    """One group's index arrays as device-resident buffers."""
+    __slots__ = ("cells", "src", "lo", "hi", "gidx", "ppack", "upack",
+                 "cols", "tails", "off", "base", "P", "Dinv")
+
+    def __init__(self, cells, src, lo, hi, gidx, ppack, upack, cols, tails,
+                 off, base):
+        self.cells, self.src, self.lo, self.hi = cells, src, lo, hi
+        self.gidx, self.ppack, self.upack = gidx, ppack, upack
+        self.cols, self.tails = cols, tails
+        self.off, self.base = off, base
+        self.P = None     # stacked padded factored panels (built at finalize)
+        self.Dinv = None  # inverted diagonal blocks (built at finalize)
+
+
+class DevicePanelStore:
+    """The flat PanelStore factorization state, resident on the device.
+
+    Construction performs a fixed number of host->device transfers
+    regardless of schedule size: the index plan (one concatenated staged
+    upload, sliced/reshaped on the device) plus either the filled initial
+    storage (``factored=False``; ``assemble_group`` then advances the
+    factorization one (level, bucket) dispatch at a time with zero
+    transfers) or the already-factored packed panels (``factored=True`` —
+    staging an existing host factor for device solves).  ``read_into``
+    brings the finished factor back in one transfer; the packed factor
+    (``factor_ext``) stays resident so ``device_solve`` reuses it without
+    re-staging.
+    """
+
+    def __init__(self, eng, sym: SymbolicFactor, sched: LevelSchedule,
+                 host_storage: np.ndarray, *, factored: bool = False):
+        self.eng, self.sym, self.sched = eng, sym, sched
+        gp = device_plan(sym, sched)
+        self.plan = gp
+        # one staged upload of every group's index arrays, device-side slicing
+        kinds = ("gidx", "cols", "tails") if factored else (
+            "cells", "src", "lo", "hi", "gidx", "ppack", "upack",
+            "cols", "tails")
+        parts = [getattr(g, k).ravel()
+                 for lvl in gp.groups for g in lvl for k in kinds]
+        flat = np.concatenate(parts) if parts else np.zeros(0, dtype=np.int32)
+        dflat = eng.put(flat)
+        self.groups: list = []
+        pos = 0
+        for lvl in gp.groups:
+            row = []
+            for g in lvl:
+                devs = {}
+                for k in kinds:
+                    a = getattr(g, k)
+                    devs[k] = dflat[pos:pos + a.size].reshape(a.shape)
+                    pos += a.size
+                empty = dflat[0:0]
+                row.append(_DevGroup(
+                    cells=devs.get("cells", empty),
+                    src=devs.get("src", empty),
+                    lo=devs.get("lo", empty),
+                    hi=devs.get("hi", empty),
+                    gidx=devs["gidx"],
+                    ppack=devs.get("ppack", empty),
+                    upack=devs.get("upack", empty),
+                    cols=devs["cols"], tails=devs["tails"],
+                    off=g.off, base=g.base,
+                ))
+            self.groups.append(row)
+        self.factor_ext = None
+        self._packed: list = []
+        self._solve_ready = False
+        if factored:
+            # stage the already-factored panels, packed (one transfer)
+            packed = np.empty(gp.packed_total + 2, dtype=np.float64)
+            packed[:-2] = host_storage[gp.cells_concat]
+            packed[-2:] = (0.0, 1.0)
+            self.factor_ext = eng.put(packed)
+        else:
+            self.storage0 = eng.put(host_storage)
+            self.pool = jnp.zeros(gp.pool_size, dtype=jnp.float64)
+
+    def assemble_group(self, lvl: int, gi: int) -> None:
+        """Factor one (level, bucket) group on the device: gather+apply
+        pending updates, fused POTRF+TRSM+SYRK, pack the results."""
+        g = self.groups[lvl][gi]
+        eng = self.eng
+        buf = eng.gather_group(self.storage0, self.pool, g)
+        fp, u = eng.factor_group(buf)
+        packed, self.pool = eng.pack_group(fp, u, self.pool, g)
+        self._packed.append(packed)
+
+    def finalize(self) -> None:
+        """Concatenate the per-group packed factors into the device-resident
+        factor the solve programs read (device op, no transfer)."""
+        if self.factor_ext is not None:
+            return
+        tail = jnp.concatenate([jnp.zeros(1), jnp.ones(1)])
+        self.factor_ext = jnp.concatenate(self._packed + [tail])
+        self._packed = []
+        self.storage0 = None
+        self.pool = None
+
+    def ensure_solve_ready(self) -> None:
+        """Lazy solve preparation (first device solve only — factor-only
+        usage never pays for it): build P/Dinv for every group."""
+        if self._solve_ready:
+            return
+        self.finalize()
+        self._materialize_panels()
+        self._solve_ready = True
+
+    def _materialize_panels(self) -> None:
+        """Materialize each group's stacked padded factored-panel buffer P
+        and its inverted diagonal blocks Dinv: rebase gidx onto the
+        concatenated factor (real cells shift by the group base, the
+        zero/one cells map to the shared pair at the end of factor_ext),
+        gather ONCE, and run one batched triangular inversion per group
+        (device ops, executed once).  Solves then index no factor storage
+        and solve no triangular systems — they read the resident P/Dinv
+        buffers and run batched GEMMs, at the cost of one extra padded copy
+        of the factor on the device."""
+        total = self.plan.packed_total
+        for lvl, lgroups in enumerate(self.plan.groups):
+            for gi, g in enumerate(lgroups):
+                dg = self.groups[lvl][gi]
+                r = g.cells.shape[0]
+                sgidx = jnp.where(
+                    dg.gidx < r, dg.gidx + g.base, dg.gidx - r + total
+                )
+                dg.P = self.factor_ext[sgidx]
+                dg.Dinv = self.eng.invert_diag(dg.P)
+
+    def read_into(self, host_storage: np.ndarray) -> None:
+        """One bulk device->host transfer of the (factored) packed panels."""
+        self.finalize()
+        packed = self.eng.get(self.factor_ext)
+        host_storage[self.plan.cells_concat] = packed[:-2]
+
+
+def device_solve(dstore: DevicePanelStore, b: np.ndarray) -> np.ndarray:
+    """Solve A x = b with the device-resident factor: level-scheduled batched
+    forward/backward substitution, ONE RHS upload and ONE solution download.
+
+    The RHS block lives on the device as a (n+1, nrhs) buffer (last row =
+    trash); each LEVEL runs as one jitted dispatch chaining its groups'
+    batched Dinv-GEMM diagonal steps (triangular blocks are inverted once at
+    finalize — through kernels/trsm.py on the pallas backend) and gathered
+    tail GEMM updates, forward up the levels then backward down them.
+    """
+    dstore.ensure_solve_ready()
+    sym, eng = dstore.sym, dstore.eng
+    y = np.asarray(b, dtype=np.float64)
+    squeeze = y.ndim == 1
+    if squeeze:
+        y = y[:, None]
+    yp = np.zeros((sym.n + 1, y.shape[1]), dtype=np.float64)
+    yp[:sym.n] = y[sym.perm]
+    dy = eng.put(yp)
+    groups = dstore.groups
+    for lvl in range(len(groups)):                 # forward: L z = P b
+        row = groups[lvl]
+        dy = eng.solve_fwd_level(dy, [g.P for g in row], [g.Dinv for g in row],
+                                 [g.cols for g in row], [g.tails for g in row])
+    for lvl in range(len(groups) - 1, -1, -1):     # backward: L^T x = z
+        row = groups[lvl]
+        dy = eng.solve_bwd_level(dy, [g.P for g in row], [g.Dinv for g in row],
+                                 [g.cols for g in row], [g.tails for g in row])
+    z = eng.get(dy)[:sym.n]
+    x = np.empty_like(z)
+    x[sym.perm] = z
+    return x[:, 0] if squeeze else x

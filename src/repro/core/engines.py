@@ -3,8 +3,12 @@
 A supernode panel is *staged* (host -> device transfer) into a padded,
 bucket-shaped device buffer; POTRF/TRSM/SYRK/GEMM run on the device through
 jitted functions (pure-XLA by default — the MAGMA-BLAS analogue — or the
-Pallas kernels on a real TPU); results are read back explicitly.  Assembly
-stays on the host, as in the paper.
+Pallas kernels on a real TPU); results are read back explicitly.  In the
+scalar and batched protocols assembly stays on the host, as in the paper;
+the *device-resident* protocol (put/get, gather_group/factor_group/
+pack_group, invert_diag, solve_fwd_level/solve_bwd_level — driven by
+repro.core.device_store) goes beyond it and performs assembly and the
+triangular solves entirely on the device, scatter-free.
 
 Shape bucketing: supernode shapes vary per matrix, but jit specializes on
 static shapes, so panels are padded into a small geometric family of bucket
@@ -83,6 +87,43 @@ def _bucket_batch(b: int) -> int:
     while p < b:
         p *= 2
     return p
+
+
+def _bucket_w_fine(w: int) -> int:
+    for c in (8, 16, 32, 64, 128, 256, 512):
+        if w <= c:
+            return c
+    return -(-w // 512) * 512
+
+
+def _bucket_qoct(x: int, base: int = 16) -> int:
+    """Quarter-octave bucket family: 2^k * {1, 1.25, 1.5, 1.75} — padding
+    overhead <= 25% per dimension at ~4x the bucket count of powers of two."""
+    if x <= base:
+        return base
+    b = base
+    while True:
+        for f in (1.0, 1.25, 1.5, 1.75):
+            v = int(b * f)
+            if x <= v:
+                return v
+        b *= 2
+
+
+def bucket_shape_batch(rows: int, w: int) -> tuple[int, int]:
+    """Padded (Lp, Wp) bucket for the DEVICE-RESIDENT level-scheduled path.
+
+    Much finer than ``bucket_shape``: that family is coarse because the
+    sequential staging path pays one XLA program AND one host pack loop per
+    bucket, and RLB's block slicing forces Lp up to the padded block size.
+    The device-resident path (repro.core.device_store) has neither
+    constraint — panels are gathered through precomputed index maps, so the
+    only cost of more buckets is compile count — and padded cells are pure
+    wasted flops.  Fine buckets cut the padded panel volume ~8x and the
+    padded SYRK flops ~15x on the benchmark matrices.
+    """
+    Wp = _bucket_w_fine(w)
+    return _bucket_qoct(Wp + rows - w), Wp
 
 
 class _Handle:
@@ -205,11 +246,11 @@ class DeviceEngine:
 
         return self._program(("gemm_block", Lp, Wp, nrp, ncp), lambda: jax.jit(f))
 
-    def _batch_factor_syrk_fn(self, Bp: int, Lp: int, Wp: int):
-        """Batched fused program: vmap the per-panel POTRF+TRSM+SYRK over a
-        stacked (Bp, Lp, Wp) buffer — ONE dispatch per (level, bucket) batch.
-        Returns (factored panels, update matrices); the update output is
-        (Bp, Lp-Wp, Lp-Wp) with only the lower triangle meaningful."""
+    def _one_factor_syrk(self, Lp: int, Wp: int):
+        """Per-panel fused POTRF+TRSM+SYRK (traced under vmap by the batched
+        factor and device-resident assembly programs).  Returns (factored
+        panel, update matrix); the update is (Lp-Wp, Lp-Wp) with only the
+        lower triangle meaningful ((0, 0) when the bucket has no tail)."""
         backend = self.backend
 
         def one(p):
@@ -236,8 +277,136 @@ class DeviceEngine:
             u = kops.syrk_ln(b, backend="pallas") if backend == "pallas" else b @ b.T
             return fp, u
 
+        return one
+
+    def _batch_factor_syrk_fn(self, Bp: int, Lp: int, Wp: int):
+        """Batched fused program: vmap the per-panel POTRF+TRSM+SYRK over a
+        stacked (Bp, Lp, Wp) buffer — ONE dispatch per (level, bucket) batch.
+        Returns (factored panels, update matrices); the update output is
+        (Bp, Lp-Wp, Lp-Wp) with only the lower triangle meaningful."""
+        one = self._one_factor_syrk(Lp, Wp)
         return self._program(
             ("batch_factor_syrk", Bp, Lp, Wp), lambda: jax.jit(jax.vmap(one))
+        )
+
+    # -- device-resident programs (see repro.core.device_store) -------------
+    #
+    # The device-resident numeric phase is deliberately SCATTER-FREE: XLA
+    # lowers scatter to a serial per-element loop on CPU (and it is slow on
+    # TPU too), so assembly is reformulated as gathers + one running-sum
+    # trick.  Update matrices are never scattered into ancestor storage;
+    # instead each group's real update entries are packed (a gather) into a
+    # preallocated device *pool* (a contiguous dynamic_update_slice), and
+    # when an ancestor group is later gathered, its pending contributions are
+    # summed by destination cell via prefix sums: with the group's incoming
+    # pool entries gathered in destination order, segment sums are
+    # C[hi]-C[lo] of the cumulative sum — gathers again.  Factored panels are
+    # likewise never written back to flat storage: they are packed (a gather)
+    # per group and concatenated at the end into the device-resident factor
+    # the solve programs read.  All index arrays are host-precomputed
+    # (repro.core.device_store.build_device_plan) and staged once.
+    def _gather_group_fn(self, Bp: int, Lp: int, Wp: int, r: int, n: int):
+        """Build one group's stacked padded panel buffer from the initial
+        storage and the update pool: storage gather, contribution segment
+        sums, zero/one extension, padded-layout gather."""
+
+        def f(storage0, pool, cells, src, lo, hi, gidx):
+            pc = storage0[cells]  # (r,) the group's panel cells, packed
+            if n:
+                vals = pool[src]  # incoming update entries, destination-sorted
+                C = jnp.concatenate([jnp.zeros(1, pool.dtype), jnp.cumsum(vals)])
+                pc = pc - (C[hi] - C[lo])
+            ext = jnp.concatenate(
+                [pc, jnp.zeros(1, pc.dtype), jnp.ones(1, pc.dtype)]
+            )
+            return ext[gidx]  # (Bp, Lp, Wp) stacked padded panels
+
+        return self._program(
+            ("gather_group", Bp, Lp, Wp, r, n), lambda: jax.jit(f)
+        )
+
+    def _pack_group_fn(self, Bp: int, Lp: int, Wp: int, r: int, n_out: int):
+        """Pack one group's factored panels (-> the device factor) and its
+        real update entries (-> the pool, one contiguous in-place slice)."""
+
+        def f(fp, u, pool, ppack, upack, off):
+            packed = fp.reshape(-1)[ppack]
+            if n_out:
+                pool = jax.lax.dynamic_update_slice(
+                    pool, u.reshape(-1)[upack], (off,)
+                )
+            return packed, pool
+
+        return self._program(
+            ("pack_group", Bp, Lp, Wp, r, n_out),
+            lambda: jax.jit(f, donate_argnums=2),
+        )
+
+    # Solve programs run one WHOLE LEVEL per dispatch: a level's groups are
+    # independent (antichain), so their updates chain on the donated y inside
+    # one program — dispatch count is O(levels), not O(levels x buckets).
+    # Each group's ``P`` is its stacked padded panel buffer and ``Dinv`` the
+    # inverted diagonal blocks, both materialized ONCE from the device factor
+    # at finalize time (repro.core.device_store): inverting the triangular
+    # diagonal blocks up front turns every substitution step into batched
+    # GEMMs (MAGMA's trsm strategy, same as kernels/trsm.py, and Li's
+    # batched-TRSV result for sparse triangular solves on GPUs) — thousands
+    # of tiny per-supernode triangular solves per solve call become a few
+    # matmuls per level.  ``y`` is (n+1, nrhs) with a trash row at index n.
+    # Pad reads hit the trash row, but the identity extensions and zero pad
+    # rows/columns of P keep that junk out of every real row; the trash row
+    # is reset once per level only to keep its values finite.
+    def _invert_diag_fn(self, Bp: int, Wp: int):
+        """Invert a group's stacked triangular diagonal blocks (finalize-time
+        only; the pallas backend routes through the kernels' TRSM)."""
+        backend = self.backend
+
+        def f(Ld):
+            eye = jnp.broadcast_to(jnp.eye(Wp, dtype=Ld.dtype), Ld.shape)
+            if backend == "pallas":
+                return jax.vmap(
+                    lambda A, b: kops.trsm_lln(A, b, backend="pallas")
+                )(Ld, eye)
+            return jax.lax.linalg.triangular_solve(
+                Ld, eye, left_side=True, lower=True
+            )
+
+        return self._program(("invert_diag", Bp, Wp), lambda: jax.jit(f))
+
+    def _solve_fwd_fn(self, shapes: tuple, nrhs: int):
+        """Forward substitution for one level: per group one batched
+        Dinv-GEMM for the diagonal blocks + one batched GEMM scatter-add of
+        the tails."""
+
+        def f(y, Ps, Dinvs, colss, tailss):
+            for P, Dinv, cols, tails in zip(Ps, Dinvs, colss, tailss):
+                Lp, Wp = P.shape[1], P.shape[2]
+                z = Dinv @ y[cols]                  # (Bp, Wp, nrhs)
+                y = y.at[cols.reshape(-1)].set(z.reshape(-1, z.shape[2]))
+                if Lp > Wp:
+                    u = P[:, Wp:, :] @ z            # (Bp, Lp-Wp, nrhs)
+                    y = y.at[tails.reshape(-1)].add(-u.reshape(-1, u.shape[2]))
+            return y.at[y.shape[0] - 1].set(0.0)    # reset the trash row
+
+        return self._program(
+            ("solve_fwd", shapes, nrhs), lambda: jax.jit(f, donate_argnums=0)
+        )
+
+    def _solve_bwd_fn(self, shapes: tuple, nrhs: int):
+        """Backward substitution for one level."""
+
+        def f(y, Ps, Dinvs, colss, tailss):
+            for P, Dinv, cols, tails in zip(Ps, Dinvs, colss, tailss):
+                Lp, Wp = P.shape[1], P.shape[2]
+                r = y[cols]                         # (Bp, Wp, nrhs)
+                if Lp > Wp:
+                    r = r - P[:, Wp:, :].transpose(0, 2, 1) @ y[tails]
+                z = Dinv.transpose(0, 2, 1) @ r     # (L^T)^{-1} = (L^{-1})^T
+                y = y.at[cols.reshape(-1)].set(z.reshape(-1, z.shape[2]))
+            return y.at[y.shape[0] - 1].set(0.0)
+
+        return self._program(
+            ("solve_bwd", shapes, nrhs), lambda: jax.jit(f, donate_argnums=0)
         )
 
     # -- engine protocol ----------------------------------------------------
@@ -370,6 +539,69 @@ class DeviceEngine:
     def release_batch(self, hb: _BatchHandle) -> None:
         hb.dev = None
         hb._u = None
+
+    # -- device-resident protocol (repro.core.device_store) -----------------
+    def put(self, x: np.ndarray):
+        """Host -> device transfer (counted; device-resident staging path)."""
+        dev = jax.device_put(x)
+        self.stats["transfers_in"] += 1
+        self.stats["bytes_in"] += x.nbytes
+        return dev
+
+    def get(self, x) -> np.ndarray:
+        """Device -> host transfer (counted; device-resident read-back)."""
+        out = np.asarray(jax.device_get(x))
+        self.stats["transfers_out"] += 1
+        self.stats["bytes_out"] += out.nbytes
+        return out
+
+    def gather_group(self, storage0, pool, g):
+        """Build one group's stacked padded panel buffer on the device (see
+        repro.core.device_store._DevGroup for ``g``).  Zero transfers."""
+        self.stats["device_calls"] += 1
+        Bp, Lp, Wp = g.gidx.shape
+        fn = self._gather_group_fn(
+            Bp, Lp, Wp, int(g.cells.shape[0]), int(g.src.shape[0])
+        )
+        return fn(storage0, pool, g.cells, g.src, g.lo, g.hi, g.gidx)
+
+    def factor_group(self, buf):
+        """One vmapped fused POTRF+TRSM+SYRK dispatch over a stacked buffer."""
+        self.stats["device_calls"] += 1
+        Bp, Lp, Wp = buf.shape
+        return self._batch_factor_syrk_fn(Bp, Lp, Wp)(buf)
+
+    def pack_group(self, fp, u, pool, g):
+        """Pack one group's factored panels and update entries (in-place pool
+        append).  Zero transfers."""
+        self.stats["device_calls"] += 1
+        Bp, Lp, Wp = fp.shape
+        fn = self._pack_group_fn(
+            Bp, Lp, Wp, int(g.ppack.shape[0]), int(g.upack.shape[0])
+        )
+        return fn(fp, u, pool, g.ppack, g.upack, g.off)
+
+    def invert_diag(self, P):
+        """Invert one group's stacked diagonal blocks (finalize-time)."""
+        self.stats["device_calls"] += 1
+        Bp, Lp, Wp = P.shape
+        return self._invert_diag_fn(Bp, Wp)(P[:, :Wp, :])
+
+    def solve_fwd_level(self, y, Ps, Dinvs, colss, tailss):
+        """One forward-substitution level against the device-resident RHS."""
+        self.stats["device_calls"] += 1
+        shapes = tuple(P.shape for P in Ps)
+        return self._solve_fwd_fn(shapes, int(y.shape[1]))(
+            y, Ps, Dinvs, colss, tailss
+        )
+
+    def solve_bwd_level(self, y, Ps, Dinvs, colss, tailss):
+        """One backward-substitution level against the device-resident RHS."""
+        self.stats["device_calls"] += 1
+        shapes = tuple(P.shape for P in Ps)
+        return self._solve_bwd_fn(shapes, int(y.shape[1]))(
+            y, Ps, Dinvs, colss, tailss
+        )
 
     def fetch(self, x) -> np.ndarray:
         """Per-result device->host transfer (RLB v2's per-block mode)."""

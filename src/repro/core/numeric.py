@@ -22,11 +22,12 @@ GPU version).  The engine API makes the transfers explicit:
     U = eng.syrk_tail(h)         # RL: update matrix on device, then transfer
     eng.syrk_block/gemm_block    # RLB: one call per block (pair)
 
-Assembly (the scatter into ancestor panels) always happens on the host, as in
-the paper (OpenMP there, vectorized numpy here) — through a *scatter plan*
+Assembly (the scatter into ancestor panels) goes through a *scatter plan*
 precomputed in the symbolic phase (repro.core.relind.ScatterPlan): all panels
 live in one flat array (PanelStore) and each supernode's whole update matrix
-is applied with a single fancy-indexed subtraction.
+is applied with a single fancy-indexed subtraction.  In the sequential paths
+and the mixed host/device level-scheduled path that scatter runs on the host,
+as in the paper (OpenMP there, vectorized numpy here).
 
 Beyond the paper, ``factorize_levels`` replaces the one-supernode-at-a-time
 offload loop with *level-scheduled batched* execution: supernodes on the same
@@ -34,6 +35,17 @@ supernodal-etree level are independent, so each (level x engine bucket) group
 is staged as one stacked buffer and factored by one vmapped fused
 POTRF+TRSM+SYRK dispatch (see repro.core.schedule and the engines' batched
 protocol: stage_batch / factor_batch / read_panels_batch / syrk_tail_batch).
+
+When every supernode is offloaded, the numeric phase goes fully
+*device-resident* (repro.core.device_store): the flat PanelStore storage is
+staged once, each (level x bucket) group gathers its panels, applies pending
+updates scatter-free (a pool of packed update entries + prefix-sum segment
+sums), factors, and packs its results — all on the device — and the
+finished factor is read back once: O(1) host<->device transfers total
+instead of one round trip per group.  The device-resident factor also
+serves ``CholeskyFactor.solve(b, backend="device")``: level-scheduled
+batched forward/backward substitution with the RHS block resident on the
+device and the triangular diagonal blocks pre-inverted into batched GEMMs.
 """
 from __future__ import annotations
 
@@ -134,6 +146,12 @@ class CholeskyFactor:
     sym: SymbolicFactor
     panels: list  # list of (rows_s, w_s) float64 arrays; cols are factor cols
     stats: dict | None = None
+    # flat-storage backing of ``panels`` (PanelStore) and, after a
+    # device-resident factorization or device solve, the device mirror
+    # (repro.core.device_store.DevicePanelStore) holding the factor on the
+    # accelerator for transfer-free solves
+    store: object | None = None
+    dstore: object | None = None
 
     def L_dense(self) -> np.ndarray:
         """Assemble the full dense L (for small-n validation only)."""
@@ -159,8 +177,24 @@ class CholeskyFactor:
             acc += float(np.sum(np.log(d)))
         return 2.0 * acc
 
-    def solve(self, b: np.ndarray) -> np.ndarray:
-        """Solve A x = b using P A P^T = L L^T."""
+    def solve(self, b: np.ndarray, *, backend: str = "host",
+              engine=None) -> np.ndarray:
+        """Solve A x = b using P A P^T = L L^T.
+
+        backend  'host' (per-supernode scipy loop, the paper's solve) or
+                 'device' (level-scheduled batched substitution against the
+                 device-resident factor; see repro.core.device_store).  The
+                 device path reuses the factor a device-resident
+                 ``factorize_levels`` left on the accelerator; otherwise it
+                 stages the factor once and keeps it resident for later
+                 solves.
+        engine   device backend only: DeviceEngine to stage with when no
+                 device-resident factor exists yet (default: a fresh one).
+        """
+        if backend == "device":
+            return self.solve_device(b, engine=engine)
+        if backend != "host":
+            raise ValueError(f"unknown backend {backend!r} (want 'host' or 'device')")
         sym = self.sym
         y = np.asarray(b, dtype=np.float64)[sym.perm].copy()
         squeeze = y.ndim == 1
@@ -188,6 +222,27 @@ class CholeskyFactor:
         x = np.empty_like(y)
         x[sym.perm] = y
         return x[:, 0] if squeeze else x
+
+    def solve_device(self, b: np.ndarray, *, engine=None) -> np.ndarray:
+        """Level-scheduled batched solve on the device (see
+        repro.core.device_store.device_solve).  Stages the factor on first
+        use when it is not already device-resident."""
+        from repro.core.device_store import DevicePanelStore, device_solve
+
+        if self.dstore is None:
+            if self.store is None:
+                raise ValueError(
+                    "device solve needs PanelStore-backed panels; this factor "
+                    "was built without flat storage"
+                )
+            if engine is None:
+                from repro.core.engines import DeviceEngine
+                engine = DeviceEngine()
+            sched = cached_schedule(self.sym, bucket="batch")
+            self.dstore = DevicePanelStore(
+                engine, self.sym, sched, self.store.storage, factored=True
+            )
+        return device_solve(self.dstore, b)
 
 
 def _fill_panels(sym: SymbolicFactor, Aperm: sp.csc_matrix, panels: list) -> None:
@@ -295,7 +350,7 @@ def factorize_rl(
         store.scatter(s, U)
     if device_engine is not None:
         device_engine.flush()
-    return CholeskyFactor(sym=sym, panels=panels, stats=stats)
+    return CholeskyFactor(sym=sym, panels=panels, stats=stats, store=store)
 
 
 # ---------------------------------------------------------------------------
@@ -309,6 +364,7 @@ def factorize_levels(
     device_engine=None,
     policy: OffloadPolicy | None = None,
     max_batch: int = 256,
+    assembly: str = "auto",
 ) -> CholeskyFactor:
     """Level-scheduled batched right-looking factorization.
 
@@ -327,13 +383,45 @@ def factorize_levels(
     engine this collapses the sequential path's O(nsuper) transfers and
     dispatches to O(levels x buckets).  Per-level batch statistics are
     recorded in ``stats["level_stats"]``.
+
+    assembly  'auto'   — go fully device-resident (see below) whenever a
+                         device engine takes every supernode (full offload,
+                         i.e. a zero offload threshold); host assembly
+                         otherwise.
+              'host'   — always assemble on the host (the pre-device-resident
+                         behaviour, kept for mixed-offload and comparison).
+              'device' — force the device-resident path (requires a device
+                         engine; the offload policy is ignored — everything
+                         runs on the device).
+
+    The device-resident path (repro.core.device_store) stages the filled
+    flat storage once, runs three zero-transfer dispatches per (level x
+    bucket) group (gather+apply-updates, fused factor, pack) entirely on the
+    device, and reads the factor back once: O(1) host<->device transfers
+    total.  The returned factor keeps the device storage attached
+    (``CholeskyFactor.dstore``) so ``solve(b, backend="device")`` reuses it
+    without re-staging.
     """
+    if assembly not in ("auto", "host", "device"):
+        raise ValueError(
+            f"unknown assembly {assembly!r} (want 'auto', 'host', or 'device')"
+        )
+    if assembly == "device" and device_engine is None:
+        raise ValueError("assembly='device' requires a device engine")
+    if device_engine is not None and assembly != "host" and (
+        assembly == "device"
+        or (policy is not None and policy.threshold == 0)
+    ):
+        return _factorize_levels_device(
+            sym, Aperm, device_engine, max_batch=max_batch
+        )
     engine = engine or HostEngine()
     store = init_panel_store(sym, Aperm)
     panels = store.panels
     sched = cached_schedule(sym, max_batch=max_batch)
     stats = {
         "method": "levels",
+        "assembly": "host",
         "supernodes_on_device": 0,
         "supernodes_total": sym.nsuper,
         "schedule": sched.batch_stats(),
@@ -375,7 +463,51 @@ def factorize_levels(
         stats["level_stats"].append(lrec)
     if device_engine is not None:
         device_engine.flush()
-    return CholeskyFactor(sym=sym, panels=panels, stats=stats)
+    return CholeskyFactor(sym=sym, panels=panels, stats=stats, store=store)
+
+
+def _factorize_levels_device(
+    sym: SymbolicFactor,
+    Aperm: sp.csc_matrix,
+    device_engine,
+    *,
+    max_batch: int = 256,
+) -> CholeskyFactor:
+    """Fully device-resident level-scheduled factorization: assembly runs on
+    the device through precomputed index plans (scatter-free fan-in — see
+    repro.core.device_store), so the whole numeric phase costs O(1)
+    host<->device transfers (stage once, read the factor back once).  Uses
+    the fine ``bucket="batch"`` schedule: without per-bucket staging loops,
+    finer buckets only cost compile count and cut padded flops ~15x."""
+    from repro.core.device_store import DevicePanelStore
+
+    store = init_panel_store(sym, Aperm)
+    sched = cached_schedule(sym, max_batch=max_batch, bucket="batch")
+    dstore = DevicePanelStore(device_engine, sym, sched, store.storage)
+    stats = {
+        "method": "levels",
+        "assembly": "device",
+        "supernodes_on_device": sym.nsuper,
+        "supernodes_total": sym.nsuper,
+        "schedule": sched.batch_stats(),
+        "level_stats": [],
+    }
+    for lvl, lgroups in enumerate(sched.groups):
+        lrec = {"level": lvl, "supernodes": 0, "batches": 0, "max_batch": 0,
+                "on_device": 0}
+        for gi, bg in enumerate(lgroups):
+            dstore.assemble_group(lvl, gi)
+            nb = int(bg.ids.shape[0])
+            lrec["batches"] += 1
+            lrec["supernodes"] += nb
+            lrec["on_device"] += nb
+            lrec["max_batch"] = max(lrec["max_batch"], nb)
+        stats["level_stats"].append(lrec)
+    dstore.read_into(store.storage)  # ONE bulk factor read-back
+    device_engine.flush()
+    return CholeskyFactor(
+        sym=sym, panels=store.panels, stats=stats, store=store, dstore=dstore
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -395,7 +527,8 @@ def factorize_rlb(
     ``batch_transfers=True`` is the first version (keep every block update on
     the device until the supernode is done, then transfer them all at once)."""
     engine = engine or HostEngine()
-    panels = init_panels(sym, Aperm)
+    store = init_panel_store(sym, Aperm)
+    panels = store.panels
     stats = {
         "method": "rlb", "supernodes_on_device": 0,
         "supernodes_total": sym.nsuper, "blas_calls": 0,
@@ -406,7 +539,9 @@ def factorize_rlb(
         eng = _pick_engine(engine, device_engine, policy, sym, s, stats)
         h = eng.stage(panels[s], w)
         eng.factor(h)
-        panels[s] = eng.read_panel(h)
+        out = eng.read_panel(h)
+        if out is not panels[s]:  # in-place: panels are PanelStore views
+            panels[s][...] = out
         t = sym.rows[s][w:]
         if not t.shape[0]:
             eng.release(h)
@@ -446,4 +581,4 @@ def factorize_rlb(
                     panels[a][rpos[:, None], np.arange(c0, c0 + nb)[None, :]] -= R
     if device_engine is not None:
         device_engine.flush()
-    return CholeskyFactor(sym=sym, panels=panels, stats=stats)
+    return CholeskyFactor(sym=sym, panels=panels, stats=stats, store=store)

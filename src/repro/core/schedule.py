@@ -29,8 +29,16 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.engines import bucket_shape
+from repro.core.engines import bucket_shape, bucket_shape_batch
 from repro.core.symbolic import SymbolicFactor
+
+#: bucket functions selectable by ``build_schedule(..., bucket=...)``:
+#: "seq" — the engines' staging bucket family (coarse; shared with the
+#:         sequential offload path, exactly the PR 1 behaviour), used by the
+#:         host-assembly batched path;
+#: "batch" — the fine family for the device-resident path, where padding is
+#:         pure wasted compute (see engines.bucket_shape_batch).
+BUCKET_FNS = {"seq": bucket_shape, "batch": bucket_shape_batch}
 
 
 def supernode_levels(sparent: np.ndarray) -> np.ndarray:
@@ -69,6 +77,9 @@ class BatchGroup:
 class LevelSchedule:
     levels: np.ndarray          # (nsuper,) level of each supernode
     groups: list = field(default_factory=list)  # list[list[BatchGroup]] per level
+    # lazily-built device index plan (repro.core.device_store.DeviceGroupPlan);
+    # cached here so factorizations and solves sharing this schedule reuse it
+    device_plan: object | None = field(default=None, repr=False, compare=False)
 
     @property
     def n_levels(self) -> int:
@@ -94,13 +105,16 @@ def build_schedule(
     *,
     max_batch: int = 256,
     cell_budget: int = 1 << 24,
+    bucket: str = "seq",
 ) -> LevelSchedule:
     """Group each level's supernodes by engine bucket and chunk the groups.
 
     ``cell_budget`` caps ``batch * max(Lp*Wp, (Lp-Wp)^2)`` — the larger of
     the stacked panel buffer and the stacked update-matrix buffer, in f64
     cells (default 16M cells = 128 MiB) — so huge buckets get small batches.
+    ``bucket`` selects the bucket family (see BUCKET_FNS).
     """
+    bucket_fn = BUCKET_FNS[bucket]
     lev = supernode_levels(sym.sparent)
     nlev = int(lev.max()) + 1 if sym.nsuper else 0
     groups: list = []
@@ -108,7 +122,7 @@ def build_schedule(
         ids = np.flatnonzero(lev == l)
         by_bucket: dict = {}
         for s in ids:
-            key = bucket_shape(int(sym.rows[s].shape[0]), sym.width(int(s)))
+            key = bucket_fn(int(sym.rows[s].shape[0]), sym.width(int(s)))
             by_bucket.setdefault(key, []).append(int(s))
         lgroups = []
         for (Lp, Wp), members in sorted(by_bucket.items()):
@@ -131,16 +145,17 @@ def cached_schedule(
     *,
     max_batch: int = 256,
     cell_budget: int = 1 << 24,
+    bucket: str = "seq",
 ) -> LevelSchedule:
     """Cached accessor mirroring ``relind.scatter_plan``: build once per
-    (max_batch, cell_budget) per SymbolicFactor, reuse across
+    (max_batch, cell_budget, bucket) per SymbolicFactor, reuse across
     factorizations."""
     if sym.schedules is None:
         sym.schedules = {}
-    key = (max_batch, cell_budget)
+    key = (max_batch, cell_budget, bucket)
     sched = sym.schedules.get(key)
     if sched is None:
         sched = sym.schedules[key] = build_schedule(
-            sym, max_batch=max_batch, cell_budget=cell_budget
+            sym, max_batch=max_batch, cell_budget=cell_budget, bucket=bucket
         )
     return sched

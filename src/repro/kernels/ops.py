@@ -112,6 +112,34 @@ def trsm_rlt(L, B, *, backend: str | None = None, block: int = 128):
     return out[:M, :W]
 
 
+def trsm_lln(L, B, *, backend: str | None = None, block: int = 128):
+    """L @ X = B  ->  X.  L: (W, W) lower, B: (W, N).
+
+    The solve phase's forward substitution per supernode.  Reuses the
+    right-side Pallas kernel through a transpose: L X = B <=> X^T L^T = B^T.
+    """
+    backend = backend or default_backend()
+    if backend == "xla":
+        return _ref.ref_trsm_lln(L, B)
+    return trsm_rlt(L, B.T, backend=backend, block=block).T
+
+
+def trsm_llt(L, B, *, backend: str | None = None, block: int = 128):
+    """L^T @ X = B  ->  X.  L: (W, W) lower, B: (W, N).
+
+    The solve phase's backward substitution per supernode.  The Pallas kernel
+    only applies L^{-T} from the right, so route through the persymmetric
+    flip: J L^T J (J = row/col reversal) is again lower-triangular, and
+        trsm_rlt(J L^T J, B^T J) = B^T J (J L^{-1} J) = B^T L^{-1} J = X^T J.
+    """
+    backend = backend or default_backend()
+    if backend == "xla":
+        return _ref.ref_trsm_llt(L, B)
+    Lf = L.T[::-1, ::-1]
+    R = trsm_rlt(Lf, B.T[:, ::-1], backend=backend, block=block)
+    return R[:, ::-1].T
+
+
 def potrf(A, *, backend: str | None = None, block: int = 128):
     """L = chol(A), lower.  A SPD (W, W)."""
     backend = backend or default_backend()

@@ -21,6 +21,18 @@ def ref_trsm_rlt(L: jax.Array, B: jax.Array) -> jax.Array:
     return y.T
 
 
+def ref_trsm_lln(L: jax.Array, B: jax.Array) -> jax.Array:
+    """X such that L @ X = B  (left / lower / no-transpose / non-unit)."""
+    return jax.lax.linalg.triangular_solve(L, B, left_side=True, lower=True)
+
+
+def ref_trsm_llt(L: jax.Array, B: jax.Array) -> jax.Array:
+    """X such that L^T @ X = B  (left / lower / transpose / non-unit)."""
+    return jax.lax.linalg.triangular_solve(
+        L, B, left_side=True, lower=True, transpose_a=True
+    )
+
+
 def ref_potrf(a: jax.Array) -> jax.Array:
     return jnp.linalg.cholesky(a)
 

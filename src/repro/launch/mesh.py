@@ -13,12 +13,19 @@ from __future__ import annotations
 import jax
 
 
+def axis_types_kw(n_axes: int) -> dict:
+    """``axis_types=`` kwarg for ``jax.make_mesh``, empty on jax builds that
+    predate ``jax.sharding.AxisType`` (where Auto is the only behaviour)."""
+    at = getattr(jax.sharding, "AxisType", None)
+    if at is None:
+        return {}
+    return {"axis_types": (at.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **axis_types_kw(len(axes)))
 
 
 def make_host_mesh(shape: tuple[int, ...] = (1, 1), axes: tuple[str, ...] = ("data", "model")):
@@ -28,9 +35,7 @@ def make_host_mesh(shape: tuple[int, ...] = (1, 1), axes: tuple[str, ...] = ("da
         n *= s
     avail = len(jax.devices())
     assert n <= avail, f"mesh {shape} needs {n} devices, have {avail}"
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **axis_types_kw(len(axes)))
 
 
 # Hardware model (TPU v5e-like, per chip) used by the roofline analysis.

@@ -87,6 +87,8 @@ def roofline(compiled, hlo_text: str, n_devices: int, *,
              cfg=None, spec=None, kind: str | None = None,
              model_flops: float | None = None) -> dict:
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per computation
+        cost = cost[0] if cost else {}
     parsed = analyze_hlo(hlo_text, n_devices)
     flops_dev = parsed.flops
     bytes_dev_raw = float(cost.get("bytes accessed", 0.0))

@@ -222,14 +222,17 @@ def moe_forward_local(cfg: ModelConfig, p: dict, x: jax.Array, mesh) -> tuple[ja
     # shardings so shard_map inserts NO resharding collectives.
     w_spec = P("model", dp if dp else None, None)
     wd_spec = P("model", None, dp if dp else None)
-    out, aux = jax.shard_map(
-        local_fn,
-        mesh=mesh,
-        in_specs=(P(dp if dp else None, None), P(None, None),
-                  w_spec, w_spec, wd_spec),
-        out_specs=(P(dp if dp else None, None), P()),
-        check_vma=False,
-    )(xt, router, p["w_gate"], p["w_up"], p["w_down"])
+    in_specs = (P(dp if dp else None, None), P(None, None),
+                w_spec, w_spec, wd_spec)
+    out_specs = (P(dp if dp else None, None), P())
+    if hasattr(jax, "shard_map"):
+        smapped = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                                out_specs=out_specs, check_vma=False)
+    else:  # older jax: experimental namespace, check_vma was check_rep
+        from jax.experimental.shard_map import shard_map as _shard_map
+        smapped = _shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False)
+    out, aux = smapped(xt, router, p["w_gate"], p["w_up"], p["w_down"])
 
     out = out.reshape(B, S, d)
     if "shared_gate" in p:

@@ -37,8 +37,8 @@ SCRIPT = textwrap.dedent("""
     import repro.configs as C
     C.SHAPES = reg.SHAPES
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import axis_types_kw
+    mesh = jax.make_mesh((2, 4), ("data", "model"), **axis_types_kw(2))
     out = {}
     for arch, shape in [("llama3.2-1b", "train_4k"),
                         ("deepseek-v3-671b", "train_4k"),

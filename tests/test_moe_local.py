@@ -21,8 +21,8 @@ SCRIPT = textwrap.dedent("""
     from repro.models.common import ModelConfig, set_active_mesh
     from repro.models.moe import moe_params, moe_forward, _moe_forward_global
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import axis_types_kw
+    mesh = jax.make_mesh((2, 4), ("data", "model"), **axis_types_kw(2))
     set_active_mesh(mesh)
     # capacity ample so local-vs-global dropping differences vanish;
     # NOTE: local capacity is per data-shard, global is pooled, so only the

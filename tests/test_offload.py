@@ -25,7 +25,9 @@ def problem():
 def test_offload_matches_host(problem, method, kw):
     A, sym, Ap, b, F_host = problem
     eng = DeviceEngine()
-    F = cholesky(A, method=method, sym=sym, Aperm=Ap,
+    # pin the paper's sequential loop: with a device engine the default
+    # schedule is now 'levels' (see test_device_engine_defaults_to_levels)
+    F = cholesky(A, method=method, sym=sym, Aperm=Ap, schedule="seq",
                  device_engine=eng, offload_threshold=2000, **kw)
     for p1, p2 in zip(F.panels, F_host.panels):
         np.testing.assert_allclose(p1, p2, rtol=1e-10, atol=1e-9)
@@ -34,7 +36,8 @@ def test_offload_matches_host(problem, method, kw):
 
 
 def test_gpu_only_mode(problem):
-    """threshold=None with an engine == offload everything (paper's 'GPU only')."""
+    """threshold=None with an engine == offload everything (paper's 'GPU only').
+    Under the 'levels' default this is the fully device-resident path."""
     A, sym, Ap, b, F_host = problem
     eng = DeviceEngine()
     F = cholesky(A, method="rl", sym=sym, Aperm=Ap, device_engine=eng)
@@ -43,12 +46,36 @@ def test_gpu_only_mode(problem):
     assert np.linalg.norm(A @ x - b) / np.linalg.norm(b) < 1e-10
 
 
+def test_batch_transfers_rejected_under_levels(problem):
+    """batch_transfers tunes the sequential RLB loop; with the 'levels'
+    default it is rejected loudly instead of silently ignored."""
+    A, sym, Ap, b, _ = problem
+    with pytest.raises(ValueError, match="batch_transfers"):
+        cholesky(A, method="rlb", sym=sym, Aperm=Ap,
+                 device_engine=DeviceEngine(), batch_transfers=True)
+
+
+def test_device_engine_defaults_to_levels(problem):
+    """Passing a device engine without an explicit schedule now takes the
+    level-scheduled path (device-resident on full offload); no engine keeps
+    the sequential default."""
+    A, sym, Ap, b, F_host = problem
+    eng = DeviceEngine()
+    F = cholesky(A, method="rl", sym=sym, Aperm=Ap, device_engine=eng)
+    assert F.stats["method"] == "levels"
+    assert F.stats["assembly"] == "device"
+    F_cpu = cholesky(A, method="rl", sym=sym, Aperm=Ap)
+    assert F_cpu.stats["method"] == "rl"
+    for p1, p2 in zip(F.panels, F_host.panels):
+        np.testing.assert_allclose(p1, p2, rtol=1e-10, atol=1e-9)
+
+
 def test_threshold_monotone(problem):
     A, sym, Ap, b, _ = problem
     counts = []
     for thr in (100_000, 10_000, 1_000):
         eng = DeviceEngine()
-        F = cholesky(A, method="rl", sym=sym, Aperm=Ap,
+        F = cholesky(A, method="rl", sym=sym, Aperm=Ap, schedule="seq",
                      device_engine=eng, offload_threshold=thr)
         counts.append(F.stats["supernodes_on_device"])
     assert counts == sorted(counts)  # lower threshold -> more on device
@@ -60,7 +87,7 @@ def test_pallas_engine_small():
     b = np.ones(60)
     for method in ("rl", "rlb"):
         eng = DeviceEngine(backend="pallas")
-        F = cholesky(A, method=method, sym=sym, Aperm=Ap,
+        F = cholesky(A, method=method, sym=sym, Aperm=Ap, schedule="seq",
                      device_engine=eng, offload_threshold=0)
         x = F.solve(b)
         assert np.linalg.norm(A @ x - b) / np.linalg.norm(b) < 1e-9
@@ -70,7 +97,7 @@ def test_fused_vs_unfused_engine(problem):
     A, sym, Ap, b, F_host = problem
     for fused in (True, False):
         eng = DeviceEngine(fused=fused)
-        F = cholesky(A, method="rl", sym=sym, Aperm=Ap,
+        F = cholesky(A, method="rl", sym=sym, Aperm=Ap, schedule="seq",
                      device_engine=eng, offload_threshold=5000)
         x = F.solve(b)
         assert np.linalg.norm(A @ x - b) / np.linalg.norm(b) < 1e-10

@@ -90,10 +90,11 @@ def test_levels_device_matches_and_reduces_dispatches():
     F_host = cholesky(A, method="rl", sym=sym, Aperm=Ap)
 
     eng_seq = DeviceEngine()
-    cholesky(A, method="rl", sym=sym, Aperm=Ap, device_engine=eng_seq)
+    cholesky(A, method="rl", schedule="seq", sym=sym, Aperm=Ap,
+             device_engine=eng_seq)
     eng_lvl = DeviceEngine()
-    F = cholesky(A, method="rl", schedule="levels", sym=sym, Aperm=Ap,
-                 device_engine=eng_lvl)
+    F = cholesky(A, method="rl", schedule="levels", assembly="host",
+                 sym=sym, Aperm=Ap, device_engine=eng_lvl)
     for p1, p2 in zip(F.panels, F_host.panels):
         np.testing.assert_allclose(p1, p2, rtol=1e-10, atol=1e-9)
     assert F.stats["supernodes_on_device"] == sym.nsuper
@@ -102,6 +103,15 @@ def test_levels_device_matches_and_reduces_dispatches():
     assert eng_lvl.stats["device_calls"] * 3 <= eng_seq.stats["device_calls"]
     # per-level accounting adds up
     assert sum(r["supernodes"] for r in F.stats["level_stats"]) == sym.nsuper
+    # the device-resident path goes further: O(1) transfers total
+    eng_dev = DeviceEngine()
+    Fd = cholesky(A, method="rl", schedule="levels", sym=sym, Aperm=Ap,
+                  device_engine=eng_dev)
+    assert Fd.stats["assembly"] == "device"
+    for p1, p2 in zip(Fd.panels, F_host.panels):
+        np.testing.assert_allclose(p1, p2, rtol=1e-10, atol=1e-9)
+    assert eng_dev.stats["transfers_in"] == 2
+    assert eng_dev.stats["transfers_out"] == 1
 
 
 def test_levels_mixed_offload_threshold():
