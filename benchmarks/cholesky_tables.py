@@ -101,17 +101,23 @@ def run_suite(names=None, *, rl_threshold=RL_THRESHOLD, rlb_threshold=RLB_THRESH
 
 
 def run_schedule_compare(names=None, *, verify: bool = True):
-    """Sequential vs level-scheduled batched vs device-resident execution.
+    """Sequential vs level-scheduled batched vs device-resident execution,
+    unfused (PR 2) and fused+async.
 
-    All three runs push EVERY supernode through the same DeviceEngine (no
-    size threshold), so the comparison isolates the scheduling/residency
+    All runs push EVERY supernode through the same DeviceEngine (no size
+    threshold), so the comparison isolates the scheduling/residency/fusion
     changes: the level-scheduled path (PR 1, host assembly) stacks each
-    (etree level x engine bucket) group into one vmapped dispatch, collapsing
-    O(nsuper) transfers/dispatches to O(levels x buckets); the
-    device-resident path (assembly on the device) collapses the transfers
-    further to O(1) — stage once, read the factor back once.  Returns one
-    dict per matrix with times, engine counters, and reduction ratios.
+    (etree level x engine bucket) group into one vmapped dispatch,
+    collapsing O(nsuper) transfers/dispatches to O(levels x buckets); the
+    unfused device-resident path (PR 2) moves assembly on-device behind
+    three dispatches per group with one up-front staging transfer; the
+    fused+async path runs each group as ONE dispatch and overlaps per-level
+    chunked staging with compute.  Padded-FLOP waste per group
+    (core.schedule.group_flop_stats) is recorded for the schedules used.
+    Returns one dict per matrix with times, engine counters, and ratios.
     """
+    from repro.core import cached_schedule, group_flop_stats
+
     names = names or list(MATRIX_SUITE)
     rows = []
     for name in names:
@@ -136,29 +142,69 @@ def run_schedule_compare(names=None, *, verify: bool = True):
                                           assembly="host", sym=sym, Aperm=Aperm,
                                           device_engine=eng_lvl))
 
+        # The fused-vs-unfused pair is the headline comparison: unfused is
+        # the PR 2 oracle (device-resident, three dispatches per group, one
+        # monolithic staging upload), fused+async is this PR (one dispatch
+        # per group, per-level double-buffered staging).  Their timed reps
+        # are INTERLEAVED best-of-3 so external load (shared-host vCPU
+        # contention, frequency drift) hits both legs equally; the engine
+        # counters are per-call deterministic and divided back out.
+        reps = 3
+        eng_un = DeviceEngine(fused_groups=False)
+        cholesky(A, method="rl", schedule="levels", sym=sym, Aperm=Aperm,
+                 device_engine=eng_un)
         eng_dev = DeviceEngine()
         cholesky(A, method="rl", schedule="levels", sym=sym, Aperm=Aperm,
                  device_engine=eng_dev)
+        eng_un.stats = {k: 0 for k in eng_un.stats}
         eng_dev.stats = {k: 0 for k in eng_dev.stats}
-        t_dev, Fd = _time(lambda: cholesky(A, method="rl", schedule="levels",
-                                           sym=sym, Aperm=Aperm,
-                                           device_engine=eng_dev))
+        t_un = t_dev = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            Fu = cholesky(A, method="rl", schedule="levels", sym=sym,
+                          Aperm=Aperm, device_engine=eng_un)
+            t_un = min(t_un, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            Fd = cholesky(A, method="rl", schedule="levels", sym=sym,
+                          Aperm=Aperm, device_engine=eng_dev)
+            t_dev = min(t_dev, time.perf_counter() - t0)
+        eng_un.stats = {k: v // reps for k, v in eng_un.stats.items()}
+        eng_dev.stats = {k: v // reps for k, v in eng_dev.stats.items()}
+        assert Fd.stats["dispatches_per_group"] == 1
+        assert Fd.stats["staging"] == "async"
 
+        flops = group_flop_stats(
+            sym, cached_schedule(sym, bucket=Fd.stats["bucket"])
+        )
         rec = {
             "matrix": name, "n": n, "nsuper": sym.nsuper,
-            "seq_s": t_seq, "levels_s": t_lvl, "device_s": t_dev,
+            "seq_s": t_seq, "levels_s": t_lvl,
+            "device_unfused_s": t_un, "device_fused_s": t_dev,
             "seq_transfers_in": eng_seq.stats["transfers_in"],
             "levels_transfers_in": eng_lvl.stats["transfers_in"],
-            "device_transfers_in": eng_dev.stats["transfers_in"],
+            "device_unfused_transfers_in": eng_un.stats["transfers_in"],
+            "device_fused_transfers_in": eng_dev.stats["transfers_in"],
             "device_transfers_out": eng_dev.stats["transfers_out"],
             "seq_device_calls": eng_seq.stats["device_calls"],
             "levels_device_calls": eng_lvl.stats["device_calls"],
-            "device_device_calls": eng_dev.stats["device_calls"],
+            "device_unfused_device_calls": eng_un.stats["device_calls"],
+            "device_fused_device_calls": eng_dev.stats["device_calls"],
             "transfers_in_ratio":
                 eng_seq.stats["transfers_in"] / max(1, eng_lvl.stats["transfers_in"]),
             "device_calls_ratio":
                 eng_seq.stats["device_calls"] / max(1, eng_lvl.stats["device_calls"]),
-            "device_vs_levels_speedup": t_lvl / t_dev,
+            "device_vs_levels_speedup": t_lvl / t_un,
+            "fused_vs_unfused_speedup": t_un / t_dev,
+            "dispatches_per_group_unfused": Fu.stats["dispatches_per_group"],
+            "dispatches_per_group_fused": Fd.stats["dispatches_per_group"],
+            "staging": Fd.stats["staging"],
+            "bucket": Fd.stats["bucket"],
+            "flops_true": flops["true"],
+            "flops_padded": flops["padded"],
+            "flops_masked": flops["masked"],
+            "padded_flop_waste": flops["padded_waste"],
+            "masked_flop_waste": flops["masked_waste"],
+            "flops_per_group": flops["groups"],
             "levels": F.stats["schedule"]["levels"],
             "batches": F.stats["schedule"]["batches"],
         }
@@ -220,20 +266,30 @@ def table_solve(rows) -> str:
 
 
 def table_schedule(rows) -> str:
-    """Seq vs level-scheduled (host assembly) vs device-resident execution."""
-    out = ["matrix,n,nsuper,levels,batches,seq_s,levels_s,device_s,"
-           "dev_vs_levels_speedup,"
-           "transfers_in_seq,transfers_in_levels,transfers_in_device,"
-           "device_calls_seq,device_calls_levels,device_calls_device,resid"]
+    """Seq vs level-scheduled (host assembly) vs device-resident execution,
+    unfused (3 dispatches/group) and fused+async (1 dispatch/group)."""
+    out = ["matrix,n,nsuper,levels,batches,seq_s,levels_s,"
+           "device_unfused_s,device_fused_s,"
+           "dev_vs_levels_speedup,fused_vs_unfused_speedup,"
+           "transfers_in_seq,transfers_in_levels,transfers_in_unfused,"
+           "transfers_in_fused,"
+           "device_calls_seq,device_calls_levels,device_calls_unfused,"
+           "device_calls_fused,"
+           "padded_flop_waste,masked_flop_waste,resid"]
     for r in rows:
         out.append(
             f"{r['matrix']},{r['n']},{r['nsuper']},{r['levels']},{r['batches']},"
-            f"{r['seq_s']:.3f},{r['levels_s']:.3f},{r['device_s']:.3f},"
+            f"{r['seq_s']:.3f},{r['levels_s']:.3f},"
+            f"{r['device_unfused_s']:.3f},{r['device_fused_s']:.3f},"
             f"{r['device_vs_levels_speedup']:.2f},"
+            f"{r['fused_vs_unfused_speedup']:.2f},"
             f"{r['seq_transfers_in']},{r['levels_transfers_in']},"
-            f"{r['device_transfers_in']},"
+            f"{r['device_unfused_transfers_in']},"
+            f"{r['device_fused_transfers_in']},"
             f"{r['seq_device_calls']},{r['levels_device_calls']},"
-            f"{r['device_device_calls']},"
+            f"{r['device_unfused_device_calls']},"
+            f"{r['device_fused_device_calls']},"
+            f"{r['padded_flop_waste']:.3f},{r['masked_flop_waste']:.3f},"
             f"{r.get('device_resid', float('nan')):.2e}"
         )
     return "\n".join(out)

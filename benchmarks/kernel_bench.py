@@ -2,7 +2,7 @@
 here) timed against the numpy host BLAS, plus interpret-mode Pallas
 correctness spot checks (interpret is a correctness harness, not a timing
 one — the Pallas kernels' performance claim is structural: 128-aligned MXU
-tiles, VMEM-resident accumulators; see DESIGN.md)."""
+tiles, VMEM-resident accumulators; see src/repro/kernels/DESIGN.md)."""
 from __future__ import annotations
 
 import time
@@ -13,12 +13,14 @@ import numpy as np
 
 
 def _bench(fn, *args, repeats=5):
-    fn(*args)  # warm
+    jax.block_until_ready(fn(*args))  # warm
     best = float("inf")
     for _ in range(repeats):
         t0 = time.perf_counter()
         out = fn(*args)
-        jax.block_until_ready(out) if hasattr(out, "block_until_ready") or isinstance(out, jax.Array) else None
+        # block_until_ready accepts pytrees — tuple outputs (e.g. the fused
+        # kernel's (panel, update)) must be awaited too, or times under-report
+        jax.block_until_ready(out)
         best = min(best, time.perf_counter() - t0)
     return best * 1e6  # us
 
@@ -48,9 +50,39 @@ def run() -> list[str]:
         p = jax.jit(ref.ref_potrf)
         us = _bench(p, jnp.asarray(A))
         lines.append(f"potrf_xla_w{w},{us:.1f},")
-    # pallas interpret-mode correctness spot check (tiny shapes)
+    # fused supernode pipeline: the batched xla POTRF+TRSM+SYRK chain the
+    # device engine dispatches per (level x bucket) group — the wall-clock
+    # row the fused Pallas kernel replaces on a real TPU
+    from repro.core.engines import DeviceEngine
+    for Bp, Lp, Wp in [(8, 256, 64), (16, 128, 32)]:
+        eng = DeviceEngine()
+        panels = np.zeros((Bp, Lp, Wp))
+        idx = np.arange(Wp)
+        panels[:, idx, idx] = np.linspace(2.0, 3.0, Wp)
+        panels[:, Wp:, :] = 0.01 * rng.standard_normal((Bp, Lp - Wp, Wp))
+        fn = eng._batch_factor_syrk_fn(Bp, Lp, Wp)
+        us = _bench(fn, jnp.asarray(panels))
+        lines.append(f"batch_factor_syrk_xla_{Bp}x{Lp}x{Wp},{us:.1f},")
+    # pallas interpret-mode correctness spot checks (tiny shapes)
     from repro.kernels import ops
+    from repro.kernels.fused import fused_factor_syrk
     a = jnp.asarray(rng.standard_normal((160, 96)))
     err = float(jnp.abs(ops.gemm_nt(a, a, backend="pallas") - ref.ref_gemm_nt(a, a)).max())
     lines.append(f"pallas_gemm_interpret_check,,maxerr={err:.2e}")
+    Bp, Lp, Wp = 2, 32, 16
+    panels = np.zeros((Bp, Lp, Wp))
+    idx = np.arange(Wp)
+    panels[:, idx, idx] = np.linspace(2.0, 3.0, Wp)
+    panels[:, Wp:, :] = 0.01 * rng.standard_normal((Bp, Lp - Wp, Wp))
+    rows = np.array([Lp - Wp + Wp, 20], np.int32)
+    ws = np.array([Wp, 4], np.int32)
+    fp, u = fused_factor_syrk(jnp.asarray(panels), rows, ws, interpret=True)
+    eng = DeviceEngine()
+    fpr, ur = eng._batch_factor_syrk_fn(Bp, Lp, Wp)(jnp.asarray(panels))
+    # compare the true cells of lane 0 (full extents) against the xla chain
+    err = max(
+        float(jnp.abs(fp[0] - fpr[0]).max()),
+        float(jnp.abs(jnp.tril(u[0]) - jnp.tril(ur[0])).max()),
+    )
+    lines.append(f"pallas_fused_supernode_interpret_check,,maxerr={err:.2e}")
     return lines

@@ -45,20 +45,25 @@ print(f"RL  (offload) {t_gpu:6.2f}s  resid={np.linalg.norm(A @ x - b) / np.linal
 
 # Device-resident level scheduling (beyond-paper, the default with a device
 # engine): independent supernodes on the same elimination-tree level are
-# stacked per engine bucket and factored by ONE vmapped POTRF+TRSM+SYRK
-# dispatch per group, with assembly running ON the device scatter-free
-# (pooled update entries applied at gather time via prefix-sum segment
-# sums) — O(1) host<->device transfers for the whole numeric phase (stage
-# once, read the factor back once)
+# stacked per engine bucket and each group runs as ONE fused dispatch —
+# on-device gather + scatter-free update application (prefix-sum segment
+# sums over a pooled update buffer) + POTRF+TRSM+SYRK + pack in a single
+# program.  Packed storage is staged in per-level chunks whose async
+# uploads are issued a level ahead (double buffering, overlapping the
+# previous level's compute), and the factor comes back in one bulk
+# read-back: O(levels) transfers in, 1 out, 1 dispatch per group.
 eng2 = DeviceEngine()
 cholesky(A, sym=sym, Aperm=Aperm, device_engine=eng2)
 eng2.stats = {k: 0 for k in eng2.stats}
+eng2.events.clear()
 t0 = time.time()
 F = cholesky(A, sym=sym, Aperm=Aperm, device_engine=eng2)
 t_lvl = time.time() - t0
 x = F.solve(b)
 print(f"RL  (device)  {t_lvl:6.2f}s  resid={np.linalg.norm(A @ x - b) / np.linalg.norm(b):.2e}  "
       f"levels={F.stats['schedule']['levels']}  batches={F.stats['schedule']['batches']}  "
+      f"dispatches={eng2.stats['device_calls']} "
+      f"({F.stats['dispatches_per_group']}/group, staging={F.stats['staging']})  "
       f"transfers_in={eng2.stats['transfers_in']} (seq would be {sym.nsuper})")
 
 # The factor is still resident on the device, so the solve phase can run

@@ -14,7 +14,12 @@ from repro.core.device_store import (
     device_plan,
     device_solve,
 )
-from repro.core.engines import DeviceEngine, bucket_shape, bucket_shape_batch
+from repro.core.engines import (
+    DeviceEngine,
+    bucket_shape,
+    bucket_shape_batch,
+    bucket_shape_fused,
+)
 from repro.core.merge import merge_supernodes
 from repro.core.numeric import (
     CholeskyFactor,
@@ -40,6 +45,7 @@ from repro.core.schedule import (
     LevelSchedule,
     build_schedule,
     cached_schedule,
+    group_flop_stats,
     level_sets,
     supernode_levels,
 )
@@ -61,9 +67,9 @@ __all__ = [
     "ancestor_updates", "build_scatter_plan", "count_blas_calls",
     "count_blocks", "scatter_plan", "supernode_blocks",
     "DevicePanelStore", "build_device_plan", "device_plan", "device_solve",
-    "DeviceEngine", "bucket_shape", "bucket_shape_batch",
-    "LevelSchedule", "build_schedule", "cached_schedule", "level_sets",
-    "supernode_levels",
+    "DeviceEngine", "bucket_shape", "bucket_shape_batch", "bucket_shape_fused",
+    "LevelSchedule", "build_schedule", "cached_schedule", "group_flop_stats",
+    "level_sets", "supernode_levels",
     "SymbolicFactor", "col_counts", "etree", "find_supernodes", "postorder",
     "symbolic_analyze",
 ]

@@ -60,6 +60,7 @@ def cholesky(
     schedule: str | None = None,
     max_batch: int = 256,
     assembly: str = "auto",
+    staging: str | None = None,
     sym: SymbolicFactor | None = None,
     Aperm: sp.csc_matrix | None = None,
 ) -> CholeskyFactor:
@@ -86,10 +87,15 @@ def cholesky(
                       rejected rather than silently ignored.
     max_batch         'levels' only: max supernodes stacked per dispatch
     assembly          'levels' only: 'auto' (device-resident assembly on full
-                      offload — O(1) host<->device transfers total, and the
-                      factor stays on the device for solve(backend='device')),
-                      'host' (always assemble on the host), or 'device'
-                      (force device residency; see repro.core.device_store)
+                      offload — one fused dispatch per (level x bucket)
+                      group, and the factor stays on the device for
+                      solve(backend='device')), 'host' (always assemble on
+                      the host), or 'device' (force device residency; see
+                      repro.core.device_store)
+    staging           device-resident path only: 'async' (default with fused
+                      groups — per-level packed-storage chunks whose uploads
+                      overlap earlier levels' compute, double-buffered) or
+                      'sync' (one up-front staging transfer)
     sym / Aperm       reuse a precomputed symbolic factorization
     """
     if method not in ("rl", "rlb"):
@@ -125,10 +131,15 @@ def cholesky(
     policy = None
     if device_engine is not None:
         policy = OffloadPolicy(threshold=offload_threshold if offload_threshold is not None else 0)
+    if staging is not None and schedule != "levels":
+        raise ValueError(
+            "staging applies only to the device-resident levels schedule"
+        )
     if schedule == "levels":
         return factorize_levels(
             sym, Aperm, engine=HostEngine(), device_engine=device_engine,
             policy=policy, max_batch=max_batch, assembly=assembly,
+            staging=staging,
         )
     if method == "rl":
         return factorize_rl(

@@ -96,6 +96,7 @@ class GroupIndices:
     Bp: int
     base: int
     off: int               # this group's slice start in the update pool
+    lb: int                # slice start within the level's packed chunk
     cells: np.ndarray      # (r,)
     src: np.ndarray        # (n,)
     lo: np.ndarray         # (r,)
@@ -103,6 +104,8 @@ class GroupIndices:
     gidx: np.ndarray       # (Bp, Lp, Wp)
     ppack: np.ndarray      # (r,)
     upack: np.ndarray      # (n_out,)
+    rows_arr: np.ndarray   # (Bp,) true row count per lane (pad lanes 0)
+    ws_arr: np.ndarray     # (Bp,) true width per lane (pad lanes 0)
     cols: np.ndarray       # (Bp, Wp)
     tails: np.ndarray      # (Bp, Lp-Wp)
 
@@ -112,6 +115,7 @@ class DeviceGroupPlan:
     """All GroupIndices of a schedule plus the global layouts."""
     groups: list            # list[list[GroupIndices]], same shape as sched.groups
     cells_concat: np.ndarray  # (packed_total,) factor cell of every packed slot
+    level_base: np.ndarray  # (n_levels+1,) packed-slot start of each level
     packed_total: int       # == total real factor cells
     pool_size: int          # total real update entries
 
@@ -183,7 +187,9 @@ def build_device_plan(sym: SymbolicFactor, sched: LevelSchedule) -> DeviceGroupP
     out: list = []
     gi = 0
     cells_concat = np.empty(packed_total, dtype=np.int64)
-    for lgroups in sched.groups:
+    level_base = np.zeros(len(sched.groups) + 1, dtype=np.int64)
+    for lvl_i, lgroups in enumerate(sched.groups):
+        level_base[lvl_i] = group_base[gi]
         lvl_out = []
         for bg in lgroups:
             Lp, Wp = bg.Lp, bg.Wp
@@ -199,6 +205,8 @@ def build_device_plan(sym: SymbolicFactor, sched: LevelSchedule) -> DeviceGroupP
             tails = np.full((Bp, mp), n, dtype=idx_t)
             cells = np.empty(r, dtype=idx_t)
             ppack = np.empty(r, dtype=idx_t)
+            rows_arr = np.zeros(Bp, dtype=np.int32)  # pad lanes stay (0, 0):
+            ws_arr = np.zeros(Bp, dtype=np.int32)    # the masked kernel skips them
             upacks = []
             p = 0
             for i, s in enumerate(bg.ids):
@@ -207,6 +215,8 @@ def build_device_plan(sym: SymbolicFactor, sched: LevelSchedule) -> DeviceGroupP
                 f = int(sym.super_ptr[s])
                 rows = sym.rows[s]
                 m = rows.shape[0] - w
+                rows_arr[i] = rows.shape[0]
+                ws_arr[i] = w
                 sz = rows.shape[0] * w
                 cells[p:p + sz] = offs[s] + np.arange(sz)
                 # padded row of each real row: diag rows stay, tail rows jump
@@ -237,13 +247,16 @@ def build_device_plan(sym: SymbolicFactor, sched: LevelSchedule) -> DeviceGroupP
             lvl_out.append(GroupIndices(
                 level=bg.level, Lp=Lp, Wp=Wp, B=B, Bp=Bp,
                 base=base, off=int(pool_off[gi]),
+                lb=int(base - level_base[bg.level]),
                 cells=cells, src=src, lo=lo, hi=hi, gidx=gidx,
-                ppack=ppack, upack=upack, cols=cols, tails=tails,
+                ppack=ppack, upack=upack,
+                rows_arr=rows_arr, ws_arr=ws_arr, cols=cols, tails=tails,
             ))
             gi += 1
         out.append(lvl_out)
+    level_base[-1] = packed_total
     return DeviceGroupPlan(
-        groups=out, cells_concat=cells_concat,
+        groups=out, cells_concat=cells_concat, level_base=level_base,
         packed_total=packed_total, pool_size=pool_size,
     )
 
@@ -260,14 +273,16 @@ def device_plan(sym: SymbolicFactor, sched: LevelSchedule) -> DeviceGroupPlan:
 class _DevGroup:
     """One group's index arrays as device-resident buffers."""
     __slots__ = ("cells", "src", "lo", "hi", "gidx", "ppack", "upack",
-                 "cols", "tails", "off", "base", "P", "Dinv")
+                 "rows", "ws", "cols", "tails", "off", "base", "lb",
+                 "P", "Dinv")
 
-    def __init__(self, cells, src, lo, hi, gidx, ppack, upack, cols, tails,
-                 off, base):
+    def __init__(self, cells, src, lo, hi, gidx, ppack, upack, rows, ws,
+                 cols, tails, off, base, lb):
         self.cells, self.src, self.lo, self.hi = cells, src, lo, hi
         self.gidx, self.ppack, self.upack = gidx, ppack, upack
+        self.rows, self.ws = rows, ws
         self.cols, self.tails = cols, tails
-        self.off, self.base = off, base
+        self.off, self.base, self.lb = off, base, lb
         self.P = None     # stacked padded factored panels (built at finalize)
         self.Dinv = None  # inverted diagonal blocks (built at finalize)
 
@@ -288,14 +303,44 @@ class DevicePanelStore:
     """
 
     def __init__(self, eng, sym: SymbolicFactor, sched: LevelSchedule,
-                 host_storage: np.ndarray, *, factored: bool = False):
+                 host_storage: np.ndarray, *, factored: bool = False,
+                 staging: str | None = None):
+        """``staging`` (non-factored only) picks how the raw packed storage
+        reaches the device:
+
+            'async'  — per-level chunks, each ``jax.device_put`` issued
+                       BEFORE the previous level's dispatches (device_put is
+                       asynchronous, so uploads overlap compute: the first
+                       levels factor while later panels are still in
+                       flight).  Double-buffered by the driver via
+                       ``prefetch_level``.  Default with fused groups.
+            'sync'   — one monolithic upload at construction (the PR 2
+                       behaviour; also what the three-dispatch fallback
+                       requires, since its gather reads the full storage).
+        """
         self.eng, self.sym, self.sched = eng, sym, sched
         gp = device_plan(sym, sched)
         self.plan = gp
+        self.fused = (not factored) and bool(getattr(eng, "fused_groups", False))
+        if staging is None:
+            staging = "async" if self.fused else "sync"
+        if staging not in ("async", "sync"):
+            raise ValueError(f"unknown staging {staging!r} (want 'async' or 'sync')")
+        if staging == "async" and not self.fused:
+            raise ValueError(
+                "staging='async' needs fused groups (the three-dispatch "
+                "path gathers from the full staged storage)"
+            )
+        self.staging = staging
         # one staged upload of every group's index arrays, device-side slicing
-        kinds = ("gidx", "cols", "tails") if factored else (
-            "cells", "src", "lo", "hi", "gidx", "ppack", "upack",
-            "cols", "tails")
+        if factored:
+            kinds = ("gidx", "cols", "tails")
+        elif self.fused:  # the fused program never indexes raw storage cells
+            kinds = ("src", "lo", "hi", "gidx", "ppack", "upack",
+                     "rows_arr", "ws_arr", "cols", "tails")
+        else:
+            kinds = ("cells", "src", "lo", "hi", "gidx", "ppack", "upack",
+                     "rows_arr", "ws_arr", "cols", "tails")
         parts = [getattr(g, k).ravel()
                  for lvl in gp.groups for g in lvl for k in kinds]
         flat = np.concatenate(parts) if parts else np.zeros(0, dtype=np.int32)
@@ -319,31 +364,78 @@ class DevicePanelStore:
                     gidx=devs["gidx"],
                     ppack=devs.get("ppack", empty),
                     upack=devs.get("upack", empty),
+                    rows=devs.get("rows_arr", empty),
+                    ws=devs.get("ws_arr", empty),
                     cols=devs["cols"], tails=devs["tails"],
-                    off=g.off, base=g.base,
+                    off=g.off, base=g.base, lb=g.lb,
                 ))
             self.groups.append(row)
         self.factor_ext = None
+        self.storage0 = None
         self._packed: list = []
         self._solve_ready = False
+        self._chunks: list = []
+        self._host_storage = None
         if factored:
             # stage the already-factored panels, packed (one transfer)
             packed = np.empty(gp.packed_total + 2, dtype=np.float64)
             packed[:-2] = host_storage[gp.cells_concat]
             packed[-2:] = (0.0, 1.0)
             self.factor_ext = eng.put(packed)
-        else:
+            return
+        self.pool = jnp.zeros(gp.pool_size, dtype=jnp.float64)
+        if not self.fused:
             self.storage0 = eng.put(host_storage)
-            self.pool = jnp.zeros(gp.pool_size, dtype=jnp.float64)
+            return
+        # fused staging: the raw storage packed in group (= level) order, so
+        # each level's cells are one contiguous chunk and a group's slice is
+        # [lb, lb + r) — the device never gathers through ``cells`` at all
+        lb = gp.level_base
+        nlev = len(gp.groups)
+        if staging == "sync":
+            whole = eng.put(host_storage[gp.cells_concat])
+            self._chunks = [whole[lb[l]:lb[l + 1]] for l in range(nlev)]
+        else:
+            # keep the raw storage and gather each level's cells lazily at
+            # prefetch time: by then earlier levels' dispatches are already
+            # in flight, so the host-side gather (and the device_put it
+            # feeds) both overlap compute instead of serializing up front
+            self._host_storage = host_storage
+            self._chunks = [None] * nlev
+            self.prefetch_level(0)
+
+    def prefetch_level(self, lvl: int) -> None:
+        """Gather one level's packed-storage chunk and issue its
+        (asynchronous) upload.  The driver calls this for level k+1 before
+        dispatching level k, so the transfer overlaps the factor compute
+        (double buffering); the issue order is logged to the engine's event
+        list."""
+        if (self.staging != "async" or lvl >= len(self._chunks)
+                or self._chunks[lvl] is not None):
+            return
+        eng = self.eng
+        gp = self.plan
+        cells = gp.cells_concat[gp.level_base[lvl]:gp.level_base[lvl + 1]]
+        self._chunks[lvl] = eng.put(self._host_storage[cells])
+        if hasattr(eng, "_event"):
+            eng._event("upload", lvl)
 
     def assemble_group(self, lvl: int, gi: int) -> None:
         """Factor one (level, bucket) group on the device: gather+apply
-        pending updates, fused POTRF+TRSM+SYRK, pack the results."""
+        pending updates, fused POTRF+TRSM+SYRK, pack the results — ONE
+        dispatch with fused groups, three on the fallback path."""
         g = self.groups[lvl][gi]
         eng = self.eng
-        buf = eng.gather_group(self.storage0, self.pool, g)
-        fp, u = eng.factor_group(buf)
-        packed, self.pool = eng.pack_group(fp, u, self.pool, g)
+        if self.fused:
+            if self.staging == "async" and self._chunks[lvl] is None:
+                self.prefetch_level(lvl)  # direct callers without a driver
+            packed, self.pool = eng.fused_group(
+                self._chunks[lvl], self.pool, g, lvl
+            )
+        else:
+            buf = eng.gather_group(self.storage0, self.pool, g)
+            fp, u = eng.factor_group(buf, g.rows, g.ws)
+            packed, self.pool = eng.pack_group(fp, u, self.pool, g)
         self._packed.append(packed)
 
     def finalize(self) -> None:
@@ -356,6 +448,8 @@ class DevicePanelStore:
         self._packed = []
         self.storage0 = None
         self.pool = None
+        self._chunks = []
+        self._host_storage = None
 
     def ensure_solve_ready(self) -> None:
         """Lazy solve preparation (first device solve only — factor-only

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kops
+from repro.kernels.fused import fused_factor_syrk
 
 
 def _bucket(x: int, base: int = 128) -> int:
@@ -126,6 +127,28 @@ def bucket_shape_batch(rows: int, w: int) -> tuple[int, int]:
     return _bucket_qoct(Wp + rows - w), Wp
 
 
+def _bucket_pow2(x: int, base: int) -> int:
+    b = base
+    while b < x:
+        b *= 2
+    return b
+
+
+def bucket_shape_fused(rows: int, w: int) -> tuple[int, int]:
+    """Padded (Lp, Wp) bucket for the FUSED masked-kernel path.
+
+    The fused Pallas kernel (repro.kernels.fused) takes the true per-lane
+    extents and skips pad lanes, identity-extension slabs, and
+    beyond-the-tail SYRK tiles outright, so padding costs memory but not
+    flops.  That inverts ``bucket_shape_batch``'s trade: COARSER buckets are
+    strictly better — fewer program shapes to compile, bigger batches per
+    dispatch.  Plain powers of two keep ``Lp - Wp`` a multiple of ``Wp``'s
+    base, so the kernel's SYRK tile (gcd with 128) stays MXU-friendly.
+    """
+    Wp = _bucket_pow2(w, 8)
+    return _bucket_pow2(Wp + rows - w, 16), Wp
+
+
 class _Handle:
     __slots__ = ("dev", "rows", "w", "Lp", "Wp", "_u")
 
@@ -148,24 +171,42 @@ class _BatchHandle:
 class DeviceEngine:
     """Engine that offloads the dense supernode math to the accelerator.
 
-    backend   'xla' (jnp ops; default — MAGMA-analogue device BLAS) or
-              'pallas' (routes through the Pallas kernels; interpret on CPU)
-    fused     factor the panel in ONE device call (beyond-paper: the paper
-              issues DPOTRF and DTRSM separately)
+    backend      'xla' (jnp ops — MAGMA-analogue device BLAS), 'pallas'
+                 (the fused Pallas supernode kernel + per-op kernels;
+                 interpret on CPU), or None — resolve like the kernel ops
+                 do (REPRO_KERNEL_BACKEND, else 'pallas' on TPU, 'xla'
+                 elsewhere)
+    fused        factor the panel in ONE device call (beyond-paper: the
+                 paper issues DPOTRF and DTRSM separately)
+    fused_groups device-resident path: run each (level x bucket) group as
+                 ONE dispatch (gather + apply updates + factor + pack fused
+                 into a single program) instead of three; False keeps the
+                 three-dispatch PR 2 pipeline as the oracle
     """
 
     name = "device"
 
-    def __init__(self, backend: str = "xla", fused: bool = True):
-        self.backend = backend
+    def __init__(self, backend: str | None = "xla", fused: bool = True,
+                 fused_groups: bool = True):
+        self.backend = backend if backend is not None else kops.default_backend()
         self.fused = fused
+        self.fused_groups = fused_groups
         self.stats = {"transfers_in": 0, "transfers_out": 0,
                       "bytes_in": 0, "bytes_out": 0, "device_calls": 0}
+        # ordered issue log of (tag, level) staging/dispatch events — the
+        # async double-buffering evidence (repro.core.device_store issues
+        # the level-(k+1) chunk upload before dispatching level k; tests
+        # and benchmarks assert the order here).  Deliberately NOT in
+        # ``stats``: callers zero that dict wholesale between runs.
+        self.events: list = []
         # compiled programs keyed by (kind, *bucket shape).  A plain dict on
         # the instance (NOT functools.lru_cache on bound methods, which pins
         # ``self`` in the global cache forever) so the jit cache dies with
         # the engine.
         self._programs: dict = {}
+
+    def _event(self, tag: str, lvl: int) -> None:
+        self.events.append((tag, lvl))
 
     def _program(self, key, build):
         fn = self._programs.get(key)
@@ -203,7 +244,23 @@ class DeviceEngine:
         return self._program(("syrk_tail", Lp, Wp), lambda: jax.jit(f))
 
     def _factor_syrk_fn(self, Lp: int, Wp: int):
-        """Fused factor + update-matrix program: one round trip per supernode."""
+        """Fused factor + update-matrix program: one round trip per supernode.
+
+        Under ``backend='pallas'`` this routes through the single fused
+        Pallas kernel (repro.kernels.fused) with the panel's true extents;
+        the xla path chains the factor and SYRK programs (still one jit)."""
+        if self.backend == "pallas":
+
+            def fp_(p, rows, w):
+                fp, u = fused_factor_syrk(
+                    p[None],
+                    jnp.reshape(rows, (1,)).astype(jnp.int32),
+                    jnp.reshape(w, (1,)).astype(jnp.int32),
+                    interpret=kops._interpret(),
+                )
+                return fp[0], u[0]
+
+            return self._program(("factor_syrk", Lp, Wp), lambda: jax.jit(fp_))
         factor = self._factor_fn(Lp, Wp)
         syrk = self._syrk_tail_fn(Lp, Wp)
 
@@ -280,10 +337,21 @@ class DeviceEngine:
         return one
 
     def _batch_factor_syrk_fn(self, Bp: int, Lp: int, Wp: int):
-        """Batched fused program: vmap the per-panel POTRF+TRSM+SYRK over a
-        stacked (Bp, Lp, Wp) buffer — ONE dispatch per (level, bucket) batch.
-        Returns (factored panels, update matrices); the update output is
-        (Bp, Lp-Wp, Lp-Wp) with only the lower triangle meaningful."""
+        """Batched fused program — ONE dispatch per (level, bucket) batch.
+        Under ``backend='pallas'`` the whole batch runs as a single fused
+        Pallas kernel taking the true per-lane extents (pad lanes and ragged
+        tails are masked, not computed); the xla path vmaps the per-panel
+        POTRF+TRSM+SYRK chain.  Returns (factored panels, update matrices);
+        the update output is (Bp, Lp-Wp, Lp-Wp) with only the lower triangle
+        meaningful (the pallas path zeroes the rest)."""
+        if self.backend == "pallas":
+
+            def f(p, rows, ws):
+                return fused_factor_syrk(p, rows, ws, interpret=kops._interpret())
+
+            return self._program(
+                ("batch_factor_syrk", Bp, Lp, Wp), lambda: jax.jit(f)
+            )
         one = self._one_factor_syrk(Lp, Wp)
         return self._program(
             ("batch_factor_syrk", Bp, Lp, Wp), lambda: jax.jit(jax.vmap(one))
@@ -340,6 +408,47 @@ class DeviceEngine:
         return self._program(
             ("pack_group", Bp, Lp, Wp, r, n_out),
             lambda: jax.jit(f, donate_argnums=2),
+        )
+
+    def _fused_group_fn(self, Bp: int, Lp: int, Wp: int, clen: int,
+                        r: int, n_in: int, n_out: int):
+        """ONE-dispatch group program: gather + apply pending updates +
+        batched fused factor + pack, a single jitted call per (level x
+        bucket) group — vs the three dispatches of gather_group /
+        factor_group / pack_group.  ``chunk`` is the level's packed raw
+        storage (staged per level so uploads overlap earlier levels'
+        compute; see repro.core.device_store); ``lb`` (the group's offset in
+        the chunk) and ``off`` (its pool slice start) are traced scalars so
+        same-shape groups share one compile."""
+        backend = self.backend
+        one = self._one_factor_syrk(Lp, Wp)
+
+        def f(chunk, pool, lb, off, src, lo, hi, gidx, rows, ws, ppack, upack):
+            pc = jax.lax.dynamic_slice(chunk, (lb,), (r,))
+            if n_in:
+                vals = pool[src]  # incoming update entries, destination-sorted
+                C = jnp.concatenate([jnp.zeros(1, pool.dtype), jnp.cumsum(vals)])
+                pc = pc - (C[hi] - C[lo])
+            ext = jnp.concatenate(
+                [pc, jnp.zeros(1, pc.dtype), jnp.ones(1, pc.dtype)]
+            )
+            buf = ext[gidx]  # (Bp, Lp, Wp) stacked padded panels
+            if backend == "pallas":
+                fp, u = fused_factor_syrk(
+                    buf, rows, ws, interpret=kops._interpret()
+                )
+            else:
+                fp, u = jax.vmap(one)(buf)
+            packed = fp.reshape(-1)[ppack]
+            if n_out:
+                pool = jax.lax.dynamic_update_slice(
+                    pool, u.reshape(-1)[upack], (off,)
+                )
+            return packed, pool
+
+        return self._program(
+            ("fused_group", Bp, Lp, Wp, clen, r, n_in, n_out),
+            lambda: jax.jit(f, donate_argnums=1),
         )
 
     # Solve programs run one WHOLE LEVEL per dispatch: a level's groups are
@@ -433,7 +542,11 @@ class DeviceEngine:
 
     def factor(self, h: _Handle) -> None:
         self.stats["device_calls"] += 1
-        if self.fused:
+        if self.fused and self.backend == "pallas":
+            h.dev, h._u = self._factor_syrk_fn(h.Lp, h.Wp)(
+                h.dev, np.int32(h.rows), np.int32(h.w)
+            )
+        elif self.fused:
             h.dev, h._u = self._factor_syrk_fn(h.Lp, h.Wp)(h.dev)
         else:
             h.dev = self._factor_fn(h.Lp, h.Wp)(h.dev)
@@ -441,7 +554,9 @@ class DeviceEngine:
 
     def read_panel(self, h: _Handle) -> np.ndarray:
         out = np.empty((h.rows, h.w), dtype=np.float64)
-        dv = np.asarray(h.dev)  # transfer back (async in the paper)
+        dv = np.asarray(h.dev)  # synchronous transfer back (the sequential
+        # path; the device-resident path instead overlaps its level-chunked
+        # staging with compute — see repro.core.device_store)
         out[:h.w] = dv[:h.w, :h.w]
         out[h.w:] = dv[h.Wp:h.Wp + h.rows - h.w, :h.w]
         self.stats["transfers_out"] += 1
@@ -503,7 +618,15 @@ class DeviceEngine:
     def factor_batch(self, hb: _BatchHandle) -> None:
         self.stats["device_calls"] += 1
         Bp = hb.dev.shape[0]
-        hb.dev, hb._u = self._batch_factor_syrk_fn(Bp, hb.Lp, hb.Wp)(hb.dev)
+        fn = self._batch_factor_syrk_fn(Bp, hb.Lp, hb.Wp)
+        if self.backend == "pallas":
+            rows = np.zeros(Bp, np.int32)
+            ws = np.zeros(Bp, np.int32)
+            rows[:hb.B] = hb.rows
+            ws[:hb.B] = hb.ws
+            hb.dev, hb._u = fn(hb.dev, rows, ws)
+        else:
+            hb.dev, hb._u = fn(hb.dev)
 
     def read_panels_batch(self, hb: _BatchHandle) -> list:
         dv = jax.device_get(hb.dev)  # one bulk transfer for the whole batch
@@ -565,11 +688,16 @@ class DeviceEngine:
         )
         return fn(storage0, pool, g.cells, g.src, g.lo, g.hi, g.gidx)
 
-    def factor_group(self, buf):
-        """One vmapped fused POTRF+TRSM+SYRK dispatch over a stacked buffer."""
+    def factor_group(self, buf, rows=None, ws=None):
+        """One batched fused POTRF+TRSM+SYRK dispatch over a stacked buffer.
+        ``rows``/``ws`` are the group's true per-lane extents (pad lanes 0),
+        required by the pallas masked kernel and ignored by the xla path."""
         self.stats["device_calls"] += 1
         Bp, Lp, Wp = buf.shape
-        return self._batch_factor_syrk_fn(Bp, Lp, Wp)(buf)
+        fn = self._batch_factor_syrk_fn(Bp, Lp, Wp)
+        if self.backend == "pallas":
+            return fn(buf, rows, ws)
+        return fn(buf)
 
     def pack_group(self, fp, u, pool, g):
         """Pack one group's factored panels and update entries (in-place pool
@@ -580,6 +708,21 @@ class DeviceEngine:
             Bp, Lp, Wp, int(g.ppack.shape[0]), int(g.upack.shape[0])
         )
         return fn(fp, u, pool, g.ppack, g.upack, g.off)
+
+    def fused_group(self, chunk, pool, g, lvl: int = -1):
+        """Run one (level x bucket) group end to end — gather + apply
+        updates + factor + pack — as ONE device dispatch (vs the three of
+        gather_group/factor_group/pack_group).  Zero transfers; the dispatch
+        is logged to ``events`` for the async-staging order assertion."""
+        self.stats["device_calls"] += 1
+        self._event("dispatch", lvl)
+        Bp, Lp, Wp = g.gidx.shape
+        fn = self._fused_group_fn(
+            Bp, Lp, Wp, int(chunk.shape[0]), int(g.ppack.shape[0]),
+            int(g.src.shape[0]), int(g.upack.shape[0])
+        )
+        return fn(chunk, pool, g.lb, g.off, g.src, g.lo, g.hi, g.gidx,
+                  g.rows, g.ws, g.ppack, g.upack)
 
     def invert_diag(self, P):
         """Invert one group's stacked diagonal blocks (finalize-time)."""

@@ -18,7 +18,7 @@ GPU version).  The engine API makes the transfers explicit:
 
     h = eng.stage(P, w)          # CPU -> device transfer of the supernode
     eng.factor(h)                # POTRF + TRSM on the device
-    P = eng.read_panel(h)        # device -> CPU (async in the paper)
+    P = eng.read_panel(h)        # device -> CPU
     U = eng.syrk_tail(h)         # RL: update matrix on device, then transfer
     eng.syrk_block/gemm_block    # RLB: one call per block (pair)
 
@@ -337,7 +337,8 @@ def factorize_rl(
         eng = _pick_engine(engine, device_engine, policy, sym, s, stats)
         h = eng.stage(panels[s], w)          # transfer 1: CPU -> device
         eng.factor(h)                        # POTRF + TRSM
-        out = eng.read_panel(h)              # transfer 2 (async in the paper)
+        out = eng.read_panel(h)              # transfer 2 (synchronous; the
+        # device-resident path overlaps staging with compute instead)
         if out is not panels[s]:             # HostEngine factors in place
             panels[s][...] = out
         if sym.rows[s].shape[0] == w:
@@ -365,6 +366,7 @@ def factorize_levels(
     policy: OffloadPolicy | None = None,
     max_batch: int = 256,
     assembly: str = "auto",
+    staging: str | None = None,
 ) -> CholeskyFactor:
     """Level-scheduled batched right-looking factorization.
 
@@ -394,13 +396,20 @@ def factorize_levels(
                          engine; the offload policy is ignored — everything
                          runs on the device).
 
-    The device-resident path (repro.core.device_store) stages the filled
-    flat storage once, runs three zero-transfer dispatches per (level x
-    bucket) group (gather+apply-updates, fused factor, pack) entirely on the
-    device, and reads the factor back once: O(1) host<->device transfers
-    total.  The returned factor keeps the device storage attached
-    (``CholeskyFactor.dstore``) so ``solve(b, backend="device")`` reuses it
-    without re-staging.
+    The device-resident path (repro.core.device_store) runs ONE
+    zero-transfer dispatch per (level x bucket) group (gather +
+    apply-updates + fused factor + pack in a single program; the
+    three-dispatch PR 2 pipeline remains as the ``fused_groups=False``
+    oracle), stages the packed storage in per-level chunks whose uploads
+    overlap earlier levels' compute (``staging='async'``, the default — see
+    below), and reads the factor back once.  The returned factor keeps the
+    device storage attached (``CholeskyFactor.dstore``) so
+    ``solve(b, backend="device")`` reuses it without re-staging.
+
+    staging   device-resident path only: 'async' (default with fused
+              groups) uploads level k+1's packed-storage chunk before
+              dispatching level k, double-buffered; 'sync' stages
+              everything up front in one transfer (PR 2 behaviour).
     """
     if assembly not in ("auto", "host", "device"):
         raise ValueError(
@@ -413,7 +422,12 @@ def factorize_levels(
         or (policy is not None and policy.threshold == 0)
     ):
         return _factorize_levels_device(
-            sym, Aperm, device_engine, max_batch=max_batch
+            sym, Aperm, device_engine, max_batch=max_batch, staging=staging
+        )
+    if staging is not None:
+        raise ValueError(
+            "staging applies only to the device-resident path (full offload "
+            "or assembly='device')"
         )
     engine = engine or HostEngine()
     store = init_panel_store(sym, Aperm)
@@ -472,27 +486,46 @@ def _factorize_levels_device(
     device_engine,
     *,
     max_batch: int = 256,
+    staging: str | None = None,
 ) -> CholeskyFactor:
     """Fully device-resident level-scheduled factorization: assembly runs on
     the device through precomputed index plans (scatter-free fan-in — see
-    repro.core.device_store), so the whole numeric phase costs O(1)
-    host<->device transfers (stage once, read the factor back once).  Uses
-    the fine ``bucket="batch"`` schedule: without per-bucket staging loops,
-    finer buckets only cost compile count and cut padded flops ~15x."""
+    repro.core.device_store), each (level x bucket) group is ONE fused
+    dispatch, and with ``staging='async'`` (the default) level k+1's packed
+    storage chunk is uploaded before level k is dispatched, so transfers
+    overlap compute (``jax.device_put`` is asynchronous) — the within-device
+    analogue of the fan-both formulation's communication/compute overlap.
+
+    Bucket family: the pallas fused kernel masks pad lanes, identity slabs,
+    and beyond-tail SYRK tiles outright, so it uses the coarse power-of-two
+    ``bucket="fused"`` family (fewer compiles, bigger batches, near-zero
+    flop waste).  The xla inner math has no masking — padded cells burn real
+    flops — so it keeps the fine ``bucket="batch"`` family."""
     from repro.core.device_store import DevicePanelStore
 
     store = init_panel_store(sym, Aperm)
-    sched = cached_schedule(sym, max_batch=max_batch, bucket="batch")
-    dstore = DevicePanelStore(device_engine, sym, sched, store.storage)
+    fused = bool(getattr(device_engine, "fused_groups", False))
+    bucket = ("fused"
+              if fused and getattr(device_engine, "backend", "") == "pallas"
+              else "batch")
+    sched = cached_schedule(sym, max_batch=max_batch, bucket=bucket)
+    dstore = DevicePanelStore(device_engine, sym, sched, store.storage,
+                              staging=staging)
     stats = {
         "method": "levels",
         "assembly": "device",
+        "staging": dstore.staging,
+        "bucket": bucket,
+        "dispatches_per_group": 1 if dstore.fused else 3,
         "supernodes_on_device": sym.nsuper,
         "supernodes_total": sym.nsuper,
         "schedule": sched.batch_stats(),
         "level_stats": [],
     }
     for lvl, lgroups in enumerate(sched.groups):
+        # double buffering: issue the next level's chunk upload BEFORE this
+        # level's dispatches block on compute
+        dstore.prefetch_level(lvl + 1)
         lrec = {"level": lvl, "supernodes": 0, "batches": 0, "max_batch": 0,
                 "on_device": 0}
         for gi, bg in enumerate(lgroups):

@@ -29,7 +29,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.engines import bucket_shape, bucket_shape_batch
+from repro.core.engines import bucket_shape, bucket_shape_batch, bucket_shape_fused
 from repro.core.symbolic import SymbolicFactor
 
 #: bucket functions selectable by ``build_schedule(..., bucket=...)``:
@@ -37,8 +37,13 @@ from repro.core.symbolic import SymbolicFactor
 #:         sequential offload path, exactly the PR 1 behaviour), used by the
 #:         host-assembly batched path;
 #: "batch" — the fine family for the device-resident path, where padding is
-#:         pure wasted compute (see engines.bucket_shape_batch).
-BUCKET_FNS = {"seq": bucket_shape, "batch": bucket_shape_batch}
+#:         pure wasted compute (see engines.bucket_shape_batch);
+#: "fused" — the coarse power-of-two family for the fused masked-kernel
+#:         path, where pad lanes/slabs/tiles are skipped, not computed, so
+#:         coarse buckets buy fewer compiles and bigger batches for free
+#:         (see engines.bucket_shape_fused).
+BUCKET_FNS = {"seq": bucket_shape, "batch": bucket_shape_batch,
+              "fused": bucket_shape_fused}
 
 
 def supernode_levels(sparent: np.ndarray) -> np.ndarray:
@@ -138,6 +143,64 @@ def build_schedule(
                 ))
         groups.append(lgroups)
     return LevelSchedule(levels=lev, groups=groups)
+
+
+def group_flop_stats(sym: SymbolicFactor, sched: LevelSchedule, *,
+                     nb: int = 128, tile: int = 128) -> dict:
+    """Padded-FLOP waste accounting for a schedule, per group and in total.
+
+    Uses one consistent column-op cost model for all three execution modes
+    (constant factors cancel in the ratios):
+
+        true    Σ_s  w·(w+m)·w + m·w·m          exact supernode extents
+        padded  Σ_g  Bp·(Wp·Lp·Wp + mp·Wp·mp)   every lane at full bucket
+                                                 extent (the unfused xla path)
+        masked  Σ_lanes  wc·Lp·Wp + mp·Wp·mc    the fused masked kernel:
+                                                 pad lanes skipped, factor
+                                                 columns rounded up to the
+                                                 ``nb`` slab, SYRK tail
+                                                 rounded up to the tile
+
+    Returns ``{"true", "padded", "masked", "padded_waste", "masked_waste",
+    "groups": [...]}`` — the waste figures are padded/true and masked/true
+    ratios (1.0 = no wasted flops).
+    """
+    from repro.kernels.fused import syrk_tile
+
+    tot_true = tot_pad = tot_masked = 0
+    per_group = []
+    for lgroups in sched.groups:
+        for bg in lgroups:
+            Lp, Wp = bg.Lp, bg.Wp
+            mp = Lp - Wp
+            Bp = 1
+            while Bp < bg.ids.shape[0]:
+                Bp *= 2
+            tu = syrk_tile(mp, tile) if mp else 1
+            g_true = g_masked = 0
+            for s in bg.ids:
+                s = int(s)
+                w = sym.width(s)
+                m = sym.rows[s].shape[0] - w
+                g_true += w * (w + m) * w + m * w * m
+                wc = min(-(-w // nb) * nb, Wp)
+                mc = min(-(-m // tu) * tu, mp) if m else 0
+                g_masked += wc * Lp * Wp + mp * Wp * mc
+            g_pad = Bp * (Wp * Lp * Wp + mp * Wp * mp)
+            tot_true += g_true
+            tot_pad += g_pad
+            tot_masked += g_masked
+            per_group.append({
+                "level": bg.level, "Lp": Lp, "Wp": Wp,
+                "B": int(bg.ids.shape[0]), "Bp": Bp,
+                "true": g_true, "padded": g_pad, "masked": g_masked,
+            })
+    return {
+        "true": tot_true, "padded": tot_pad, "masked": tot_masked,
+        "padded_waste": tot_pad / tot_true if tot_true else 0.0,
+        "masked_waste": tot_masked / tot_true if tot_true else 0.0,
+        "groups": per_group,
+    }
 
 
 def cached_schedule(

@@ -6,12 +6,18 @@
              MAGMA-style pre-inverted diagonal blocks (GEMM-only kernel)
     potrf  — L = chol(A)            (DPOTRF) blocked: in-kernel unblocked
              Cholesky on the diagonal tile + trsm/syrk trailing updates
+    fused  — batched POTRF + TRSM + SYRK over a whole (level x bucket)
+             supernode group in ONE pallas_call, masking ragged extents from
+             scalar-prefetched per-lane (rows, w) instead of padding
 
 All kernels use explicit BlockSpec VMEM tiling with 128-aligned tiles for the
-MXU.  ops.py wraps them with padding + jit; ref.py holds the pure-jnp oracles
-the tests sweep against (interpret=True executes the kernel bodies on CPU).
+MXU (see DESIGN.md for the tiling/masking scheme).  ops.py wraps the per-op
+kernels with padding + jit; ref.py holds the pure-jnp oracles the tests sweep
+against (interpret=True executes the kernel bodies on CPU).
 """
 from repro.kernels import ops, ref
+from repro.kernels.fused import fused_factor_syrk, syrk_tile
 from repro.kernels.ops import gemm_nt, potrf, syrk_ln, trsm_rlt
 
-__all__ = ["ops", "ref", "gemm_nt", "syrk_ln", "trsm_rlt", "potrf"]
+__all__ = ["ops", "ref", "gemm_nt", "syrk_ln", "trsm_rlt", "potrf",
+           "fused_factor_syrk", "syrk_tile"]

@@ -1,0 +1,216 @@
+"""Fused Pallas supernode kernel: POTRF + TRSM + SYRK in ONE pallas_call.
+
+The factorization offloads each (level x bucket) group of supernodes as a
+stacked ``(Bp, Lp, Wp)`` buffer.  The unfused path runs three separate
+device programs over it (batched cholesky, batched triangular solve,
+batched SYRK) and relies on *staged* identity extensions to keep padded
+cells exact — every pad lane and every ragged tail burns real flops.  This
+kernel performs the whole pipeline per lane inside one kernel body:
+
+    1. masked panel construction   — the true per-lane extents ``(rows, w)``
+       arrive as scalar-prefetch arguments; iota predicates rebuild the
+       identity-extended layout in VMEM from the raw panel, so staging needs
+       no identity writes and pad cells can hold garbage;
+    2. blocked POTRF+TRSM          — a static loop over ``nb``-column slabs:
+       each slab is factored by an in-VMEM loop of rank-1 updates running
+       over the FULL padded height (so the rectangular below-diagonal panel
+       is triangular-solved in the same pass), then one MXU matmul pushes
+       the slab's update into the trailing columns.  Slabs whose columns lie
+       entirely in the identity extension (``k0 >= w``) are skipped with
+       ``pl.when`` — a lane of width 5 in a 128-wide bucket factors one
+       slab, not sixteen;
+    3. tiled SYRK                  — the update matrix ``U = tril(T T^T)`` is
+       gridded over ``tu``-wide column tiles (second grid dimension); tiles
+       at or beyond the lane's true tail extent ``m`` are skipped entirely
+       (``pl.when(tj*tu < m)``), so ragged tails cost flops proportional to
+       ``m``, not to the bucket's ``Lp - Wp``.
+
+Pad lanes are encoded as ``rows = w = 0``: the masked construction turns
+them into pure identity panels, every slab and every SYRK tile is skipped,
+and the outputs are written as identity / zero directly — zero flops.
+
+The batch grid dimension is ``parallel``; the SYRK tile dimension is
+``arbitrary`` so the VMEM scratch holding the factored panel persists from
+the factor step (tile 0) into the later tiles.  See DESIGN.md in this
+directory for the tiling/masking scheme and the 128-alignment argument.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across the supported range
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams", None
+)
+
+
+def syrk_tile(mp: int, cap: int = 128) -> int:
+    """SYRK column-tile width for a bucket tail of ``mp`` rows: the largest
+    power of two <= ``cap`` dividing ``mp`` (tiles must tile the output
+    exactly).  Falls back to one full-width tile when ``mp`` is odd — no
+    tail skipping, but no ragged tile either."""
+    if mp <= 0:
+        return 1
+    tu = math.gcd(mp, cap)
+    return mp if tu < 8 and tu != mp else tu
+
+
+def _fused_kernel(rows_ref, ws_ref, p_ref, fp_ref, u_ref, acc_ref, *,
+                  Lp: int, Wp: int, nb: int, tu: int):
+    b = pl.program_id(0)
+    tj = pl.program_id(1)
+    w = ws_ref[b]
+    m = rows_ref[b] - w
+    mp = Lp - Wp
+
+    ri = jax.lax.broadcasted_iota(jnp.int32, (Lp, 1), 0)
+    ci = jax.lax.broadcasted_iota(jnp.int32, (1, Wp), 1)
+
+    @pl.when(tj == 0)
+    def _factor():
+        # 1. masked panel: keep the true diag block and the true tail rows,
+        # zero everything else, then drop ones on the extension diagonal.
+        # Equivalent to the staged identity extension, but computed from the
+        # scalar-prefetched extents — pad cells may hold anything.
+        a = p_ref[0]
+        keep = ((ri < w) & (ci < w)) | ((ri >= Wp) & (ri < Wp + m) & (ci < w))
+        a = jnp.where(keep, a, 0.0)
+        a = jnp.where((ri == ci) & (ri >= w), 1.0, a)
+        acc_ref[...] = a
+
+        # 2. blocked POTRF+TRSM over nb-column slabs.  Identity-extension
+        # columns never receive updates (their rows of real columns are
+        # masked to zero), so whole slabs past the lane's width skip.
+        for k0 in range(0, Wp, nb):
+
+            @pl.when(k0 < w)
+            def _slab(k0=k0):
+                a = acc_ref[...]
+                hi = min(k0 + nb, Wp)
+
+                def col_step(j, a):
+                    k = k0 + j
+                    colk = jnp.sum(jnp.where(ci == k, a, 0.0), axis=1,
+                                   keepdims=True)              # (Lp, 1)
+                    dk = jnp.sqrt(jnp.sum(jnp.where(ri == k, colk, 0.0)))
+                    colk = colk / dk
+                    below = jnp.where(ri > k, colk, 0.0)
+                    lcol = jnp.where(ri == k, dk, below)
+                    # rank-1 update of the remaining slab columns; the row
+                    # vector is `below` at the diagonal-block rows
+                    trail = (ci > k) & (ci < hi)
+                    bd = jnp.where(trail, below[:Wp].reshape(1, Wp), 0.0)
+                    a = a - jnp.dot(below, bd,
+                                    preferred_element_type=a.dtype)
+                    return jnp.where(ci == k, lcol, a)
+
+                a = jax.lax.fori_loop(0, hi - k0, col_step, a)
+                if hi < Wp:
+                    # one MXU matmul pushes the slab into trailing columns
+                    slabL = a[:, k0:hi]                        # (Lp, nb)
+                    down = slabL[hi:Wp, :]                     # (Wp-hi, nb)
+                    upd = jnp.dot(slabL, down.T,
+                                  preferred_element_type=a.dtype)
+                    a = jnp.concatenate(
+                        [a[:, :hi], a[:, hi:] - upd], axis=1
+                    )
+                acc_ref[...] = a
+
+        fp_ref[0] = acc_ref[...]
+
+    # 3. SYRK column tile tj of U = tril(T T^T), T the factored tail.
+    # Tiles at/after the lane's true tail extent are skipped outright.
+    if u_ref is not None:
+
+        @pl.when(tj * tu < m)
+        def _syrk_tile():
+            tail = acc_ref[Wp:, :]                             # (mp, Wp)
+            blk = jax.lax.dynamic_slice(
+                tail, (tj * tu, jnp.zeros_like(tj)), (tu, Wp)
+            )
+            part = jnp.dot(tail, blk.T, preferred_element_type=tail.dtype)
+            rg = jax.lax.broadcasted_iota(jnp.int32, (mp, 1), 0)
+            cg = tj * tu + jax.lax.broadcasted_iota(jnp.int32, (1, tu), 1)
+            u_ref[0] = jnp.where(rg >= cg, part, 0.0)
+
+        @pl.when(tj * tu >= m)
+        def _skip_tile():
+            u_ref[0] = jnp.zeros(u_ref.shape[1:], u_ref.dtype)
+
+    @pl.when((tj == 0) & (w == 0))
+    def _pad_lane():
+        # pad lane (rows = w = 0): identity panel, no factor loop ran
+        fp_ref[0] = jnp.where(ri == ci, 1.0, 0.0).astype(fp_ref.dtype)
+        acc_ref[...] = fp_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("nb", "interpret"))
+def fused_factor_syrk(
+    panels: jax.Array,
+    rows: jax.Array,
+    ws: jax.Array,
+    *,
+    nb: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused batched supernode factorization: ONE pallas_call for
+    POTRF + TRSM + SYRK over a stacked group buffer.
+
+    panels  (Bp, Lp, Wp) raw packed panels (padded layout: diag block in
+            rows [0, w), tail rows at [Wp, Wp + rows - w)); identity
+            extensions are optional — the kernel masks from the extents
+    rows/ws int32 (Bp,) true per-lane extents; pad lanes are (0, 0)
+
+    Returns (fp, u): fp the factored panels in the same layout (identity
+    extension in place, strict upper zero), u the (Bp, Lp-Wp, Lp-Wp) update
+    matrices, lower triangle valid, zeros outside each lane's true (m, m).
+    """
+    Bp, Lp, Wp = panels.shape
+    nb = min(nb, Wp)
+    mp = Lp - Wp
+    tu = syrk_tile(mp)
+    ntj = max(1, mp // tu if mp else 1)
+    rows = rows.astype(jnp.int32)
+    ws = ws.astype(jnp.int32)
+
+    out_shapes = [jax.ShapeDtypeStruct((Bp, Lp, Wp), panels.dtype)]
+    out_specs = [pl.BlockSpec((1, Lp, Wp), lambda b, tj, *_: (b, 0, 0))]
+    if mp:
+        out_shapes.append(jax.ShapeDtypeStruct((Bp, mp, mp), panels.dtype))
+        out_specs.append(pl.BlockSpec((1, mp, tu), lambda b, tj, *_: (b, 0, tj)))
+        kernel = functools.partial(
+            _fused_kernel, Lp=Lp, Wp=Wp, nb=nb, tu=tu
+        )
+    else:
+        def kernel(rows_ref, ws_ref, p_ref, fp_ref, acc_ref):
+            _fused_kernel(rows_ref, ws_ref, p_ref, fp_ref, None, acc_ref,
+                          Lp=Lp, Wp=Wp, nb=nb, tu=tu)
+
+    kw = {}
+    if not interpret and _CompilerParams is not None:
+        kw["compiler_params"] = _CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Bp, ntj),
+        in_specs=[pl.BlockSpec((1, Lp, Wp), lambda b, tj, *_: (b, 0, 0))],
+        out_specs=out_specs,
+        scratch_shapes=[pltpu.VMEM((Lp, Wp), panels.dtype)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        interpret=interpret,
+        **kw,
+    )(rows, ws, panels)
+    if mp:
+        return out[0], out[1]
+    return out[0], jnp.zeros((Bp, 0, 0), panels.dtype)

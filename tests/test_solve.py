@@ -113,20 +113,40 @@ def test_solve_rejects_unknown_backend():
 # O(1) transfer regression for the device-resident factorization
 # ---------------------------------------------------------------------------
 def test_device_resident_factorization_transfer_count():
-    """The whole numeric phase is O(1) transfers: storage + index plan in,
-    factor out — independent of how many (level x bucket) batches run."""
+    """The numeric phase's transfers are O(levels), all overlapping compute:
+    index plan + one packed-storage chunk per level in (each issued before
+    the previous level's dispatches — see the async assertions in
+    test_fused.py), factor out in one bulk read-back — independent of how
+    many (level x bucket) batches run."""
     A = laplacian_3d(9)
     sym, Ap = symbolic_pipeline(A)
     eng = DeviceEngine()
     F = cholesky(A, sym=sym, Aperm=Ap, device_engine=eng)
     assert F.stats["assembly"] == "device"
+    assert F.stats["staging"] == "async"
     n_batches = F.stats["schedule"]["batches"]
+    n_levels = F.stats["schedule"]["levels"]
     assert n_batches > 3  # the reduction below is meaningful
-    assert eng.stats["transfers_in"] == 2   # flat storage + index plan
+    # index plan + one packed chunk per level (double-buffered uploads)
+    assert eng.stats["transfers_in"] == 1 + n_levels
     assert eng.stats["transfers_out"] == 1  # single factor read-back
-    # three zero-transfer dispatches per (level, bucket) group:
-    # gather+apply-updates, fused factor, pack
-    assert eng.stats["device_calls"] == 3 * n_batches
+    # ONE fused zero-transfer dispatch per (level, bucket) group:
+    # gather + apply-updates + factor + pack in a single program
+    assert eng.stats["device_calls"] == n_batches
+    # the sync staging mode keeps the PR 2 O(1)-transfer behaviour
+    eng_sync = DeviceEngine()
+    Fs = cholesky(A, sym=sym, Aperm=Ap, device_engine=eng_sync, staging="sync")
+    assert Fs.stats["staging"] == "sync"
+    assert eng_sync.stats["transfers_in"] == 2  # packed storage + index plan
+    assert eng_sync.stats["transfers_out"] == 1
+    for p1, p2 in zip(F.panels, Fs.panels):
+        np.testing.assert_allclose(p1, p2, rtol=0, atol=0)
+    # the three-dispatch PR 2 pipeline stays available as the oracle
+    eng3 = DeviceEngine(fused_groups=False)
+    F3 = cholesky(A, sym=sym, Aperm=Ap, device_engine=eng3)
+    assert eng3.stats["device_calls"] == 3 * F3.stats["schedule"]["batches"]
+    for p1, p2 in zip(F.panels, F3.panels):
+        np.testing.assert_allclose(p1, p2, rtol=1e-12, atol=1e-12)
     # the PR 1 host-assembly path pays per-batch round trips (one staging
     # transfer per ITS schedule's batches); device-resident assembly removes
     # them all
@@ -134,7 +154,10 @@ def test_device_resident_factorization_transfer_count():
     F2 = cholesky(A, sym=sym, Aperm=Ap, device_engine=eng_host, assembly="host")
     assert F2.stats["assembly"] == "host"
     assert eng_host.stats["transfers_in"] >= F2.stats["schedule"]["batches"] > 3
-    assert (eng.stats["transfers_in"] + eng.stats["transfers_out"]
+    # async: O(levels) uploads (all overlapping compute) < per-batch uploads;
+    # sync: O(1) total round trips, far below either
+    assert eng.stats["transfers_in"] < eng_host.stats["transfers_in"]
+    assert (eng_sync.stats["transfers_in"] + eng_sync.stats["transfers_out"]
             < eng_host.stats["transfers_in"])
     for p1, p2 in zip(F.panels, F2.panels):
         np.testing.assert_allclose(p1, p2, rtol=1e-10, atol=1e-9)
