@@ -93,6 +93,22 @@ def bench_solve(suite) -> dict:
     return bench
 
 
+def bench_serve() -> dict:
+    """Serving-path throughput: CholeskyServer synthetic request stream
+    (plan-cache hit/miss, factorizations/sec, solves/sec) plus the M=8
+    batched-vs-independent factorization speedup.  Emits
+    results/BENCH_serve.json."""
+    from benchmarks import serve_bench
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    bench = serve_bench.run()
+    print("\n# Serve — plan-cache stream + M=8 batched factorization")
+    print(serve_bench.table(bench))
+    out = RESULTS / "BENCH_serve.json"
+    out.write_text(json.dumps(bench, indent=2))
+    print(f"# machine-readable serve results -> {out}")
+    return bench
+
+
 def bench_kernels() -> None:
     from benchmarks import kernel_bench
     print("\n# Kernels — name,us_per_call,derived")
@@ -130,8 +146,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    choices=[None, "cholesky", "schedule", "solve", "kernels",
-                             "roofline"])
+                    choices=[None, "cholesky", "schedule", "solve", "serve",
+                             "kernels", "roofline"])
     args = ap.parse_args()
 
     if args.quick:
@@ -152,6 +168,8 @@ def main() -> None:
     if args.only in (None, "solve"):
         # same full-offload rationale as the schedule comparison
         bench_solve(suite if args.full else QUICK_SUITE)
+    if args.only in (None, "serve"):
+        bench_serve()
     if bench:
         RESULTS.mkdir(parents=True, exist_ok=True)
         out = RESULTS / "BENCH_cholesky.json"

@@ -7,7 +7,8 @@ import jax as _jax
 # device path in f64 too.  Model/training code is unaffected (explicit dtypes).
 _jax.config.update("jax_enable_x64", True)
 
-from repro.core.api import cholesky, solve, symbolic_pipeline
+from repro.core import counters
+from repro.core.api import cholesky, cholesky_many, solve, symbolic_pipeline
 from repro.core.device_store import (
     DevicePanelStore,
     build_device_plan,
@@ -22,15 +23,23 @@ from repro.core.engines import (
 )
 from repro.core.merge import merge_supernodes
 from repro.core.numeric import (
+    BatchCholeskyFactor,
     CholeskyFactor,
     HostEngine,
     OffloadPolicy,
     PanelStore,
     factorize_levels,
+    factorize_levels_device_many,
     factorize_rl,
     factorize_rlb,
     init_panel_store,
     init_panels,
+)
+from repro.core.plan_cache import (
+    CachedPlan,
+    PlanCache,
+    build_fill_plan,
+    pattern_fingerprint,
 )
 from repro.core.refine import refine_partition
 from repro.core.relind import (
@@ -59,11 +68,14 @@ from repro.core.symbolic import (
 )
 
 __all__ = [
-    "cholesky", "solve", "symbolic_pipeline",
+    "cholesky", "cholesky_many", "solve", "symbolic_pipeline",
     "merge_supernodes", "refine_partition",
-    "CholeskyFactor", "HostEngine", "OffloadPolicy", "PanelStore",
-    "factorize_levels", "factorize_rl", "factorize_rlb",
-    "init_panel_store", "init_panels",
+    "BatchCholeskyFactor", "CholeskyFactor", "HostEngine", "OffloadPolicy",
+    "PanelStore",
+    "factorize_levels", "factorize_levels_device_many", "factorize_rl",
+    "factorize_rlb", "init_panel_store", "init_panels",
+    "CachedPlan", "PlanCache", "build_fill_plan", "pattern_fingerprint",
+    "counters",
     "ancestor_updates", "build_scatter_plan", "count_blas_calls",
     "count_blocks", "scatter_plan", "supernode_blocks",
     "DevicePanelStore", "build_device_plan", "device_plan", "device_solve",

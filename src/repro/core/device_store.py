@@ -80,6 +80,7 @@ from dataclasses import dataclass
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import counters
 from repro.core.engines import _bucket_batch
 from repro.core.relind import scatter_plan
 from repro.core.schedule import LevelSchedule
@@ -123,6 +124,7 @@ class DeviceGroupPlan:
 def build_device_plan(sym: SymbolicFactor, sched: LevelSchedule) -> DeviceGroupPlan:
     """Precompute every group's index arrays (symbolic phase; O(padded factor
     cells + update entries))."""
+    counters.bump("device_plan")
     plan = scatter_plan(sym)
     offs = plan.offs
     n = sym.n
@@ -304,8 +306,14 @@ class DevicePanelStore:
 
     def __init__(self, eng, sym: SymbolicFactor, sched: LevelSchedule,
                  host_storage: np.ndarray, *, factored: bool = False,
-                 staging: str | None = None):
-        """``staging`` (non-factored only) picks how the raw packed storage
+                 staging: str | None = None, nmat: int = 1):
+        """``nmat`` > 1 selects the MULTI-MATRIX layout: ``host_storage`` is
+        (nmat, cells) — nmat value streams over ONE sparsity pattern — and
+        every value buffer (chunks, pool, factor_ext) carries a leading
+        matrix axis while the index plan is shared verbatim.  Each group
+        then factors all nmat matrices in one ``fused_group_many`` dispatch.
+
+        ``staging`` (non-factored only) picks how the raw packed storage
         reaches the device:
 
             'async'  — per-level chunks, each ``jax.device_put`` issued
@@ -321,7 +329,13 @@ class DevicePanelStore:
         self.eng, self.sym, self.sched = eng, sym, sched
         gp = device_plan(sym, sched)
         self.plan = gp
+        self.nmat = int(nmat)
         self.fused = (not factored) and bool(getattr(eng, "fused_groups", False))
+        if self.nmat > 1 and not (factored or self.fused):
+            raise ValueError(
+                "multi-matrix factorization needs fused groups (the "
+                "three-dispatch fallback has no multi-matrix programs)"
+            )
         if staging is None:
             staging = "async" if self.fused else "sync"
         if staging not in ("async", "sync"):
@@ -376,14 +390,26 @@ class DevicePanelStore:
         self._solve_ready = False
         self._chunks: list = []
         self._host_storage = None
+        # resident solve-layout index buffers, uploaded lazily at
+        # ensure_solve_ready (factor-only usage never pays for them)
+        self.trash = None
+        self._iperm = None
+        self._operm = None
         if factored:
             # stage the already-factored panels, packed (one transfer)
-            packed = np.empty(gp.packed_total + 2, dtype=np.float64)
-            packed[:-2] = host_storage[gp.cells_concat]
-            packed[-2:] = (0.0, 1.0)
+            if self.nmat > 1:
+                packed = np.empty((self.nmat, gp.packed_total + 2))
+                packed[:, :-2] = host_storage[:, gp.cells_concat]
+                packed[:, -2:] = (0.0, 1.0)
+            else:
+                packed = np.empty(gp.packed_total + 2, dtype=np.float64)
+                packed[:-2] = host_storage[gp.cells_concat]
+                packed[-2:] = (0.0, 1.0)
             self.factor_ext = eng.put(packed)
             return
-        self.pool = jnp.zeros(gp.pool_size, dtype=jnp.float64)
+        pool_shape = ((self.nmat, gp.pool_size) if self.nmat > 1
+                      else (gp.pool_size,))
+        self.pool = jnp.zeros(pool_shape, dtype=jnp.float64)
         if not self.fused:
             self.storage0 = eng.put(host_storage)
             return
@@ -393,8 +419,8 @@ class DevicePanelStore:
         lb = gp.level_base
         nlev = len(gp.groups)
         if staging == "sync":
-            whole = eng.put(host_storage[gp.cells_concat])
-            self._chunks = [whole[lb[l]:lb[l + 1]] for l in range(nlev)]
+            whole = eng.put(host_storage[..., gp.cells_concat])
+            self._chunks = [whole[..., lb[l]:lb[l + 1]] for l in range(nlev)]
         else:
             # keep the raw storage and gather each level's cells lazily at
             # prefetch time: by then earlier levels' dispatches are already
@@ -416,7 +442,7 @@ class DevicePanelStore:
         eng = self.eng
         gp = self.plan
         cells = gp.cells_concat[gp.level_base[lvl]:gp.level_base[lvl + 1]]
-        self._chunks[lvl] = eng.put(self._host_storage[cells])
+        self._chunks[lvl] = eng.put(self._host_storage[..., cells])
         if hasattr(eng, "_event"):
             eng._event("upload", lvl)
 
@@ -429,9 +455,8 @@ class DevicePanelStore:
         if self.fused:
             if self.staging == "async" and self._chunks[lvl] is None:
                 self.prefetch_level(lvl)  # direct callers without a driver
-            packed, self.pool = eng.fused_group(
-                self._chunks[lvl], self.pool, g, lvl
-            )
+            run = eng.fused_group_many if self.nmat > 1 else eng.fused_group
+            packed, self.pool = run(self._chunks[lvl], self.pool, g, lvl)
         else:
             buf = eng.gather_group(self.storage0, self.pool, g)
             fp, u = eng.factor_group(buf, g.rows, g.ws)
@@ -443,8 +468,12 @@ class DevicePanelStore:
         factor the solve programs read (device op, no transfer)."""
         if self.factor_ext is not None:
             return
-        tail = jnp.concatenate([jnp.zeros(1), jnp.ones(1)])
-        self.factor_ext = jnp.concatenate(self._packed + [tail])
+        if self.nmat > 1:
+            tail = jnp.tile(jnp.array([0.0, 1.0]), (self.nmat, 1))
+            self.factor_ext = jnp.concatenate(self._packed + [tail], axis=1)
+        else:
+            tail = jnp.concatenate([jnp.zeros(1), jnp.ones(1)])
+            self.factor_ext = jnp.concatenate(self._packed + [tail])
         self._packed = []
         self.storage0 = None
         self.pool = None
@@ -453,11 +482,29 @@ class DevicePanelStore:
 
     def ensure_solve_ready(self) -> None:
         """Lazy solve preparation (first device solve only — factor-only
-        usage never pays for it): build P/Dinv for every group."""
+        usage never pays for it): build P/Dinv for every group and upload
+        the solve-layout index buffers (trash rows + the permutations that
+        stage/unstage a resident RHS) in ONE transfer."""
         if self._solve_ready:
             return
         self.finalize()
         self._materialize_panels()
+        n, M = self.sym.n, self.nmat
+        perm = self.sym.perm
+        iperm_nat = np.empty(n, dtype=np.int64)
+        iperm_nat[perm] = np.arange(n)
+        stride = np.arange(M, dtype=np.int64) * (n + 1)
+        # padded row (mi, i) sources natural row (mi, perm[i]); trash rows
+        # source row 0 and are zeroed right after the staging gather
+        iperm = (np.concatenate([perm, [0]])[None, :]
+                 + (np.arange(M, dtype=np.int64) * n)[:, None]).ravel()
+        iperm[(n + 1) * np.arange(M) + n] = 0
+        operm = (iperm_nat[None, :] + stride[:, None]).ravel()
+        trash = stride + n
+        aux = self.eng.put(np.concatenate([trash, iperm, operm]))
+        self.trash = aux[:M]
+        self._iperm = aux[M:M + M * (n + 1)]
+        self._operm = aux[M + M * (n + 1):]
         self._solve_ready = True
 
     def _materialize_panels(self) -> None:
@@ -471,6 +518,7 @@ class DevicePanelStore:
         buffers and run batched GEMMs, at the cost of one extra padded copy
         of the factor on the device."""
         total = self.plan.packed_total
+        n, M = self.sym.n, self.nmat
         for lvl, lgroups in enumerate(self.plan.groups):
             for gi, g in enumerate(lgroups):
                 dg = self.groups[lvl][gi]
@@ -478,45 +526,92 @@ class DevicePanelStore:
                 sgidx = jnp.where(
                     dg.gidx < r, dg.gidx + g.base, dg.gidx - r + total
                 )
-                dg.P = self.factor_ext[sgidx]
+                if M > 1:
+                    # M factors stack into one (M*Bp, ...) panel batch; each
+                    # matrix's RHS rows live in its own (n+1) block, so the
+                    # per-lane column/tail targets shift by mi*(n+1) (the
+                    # shared pad target n lands on each matrix's OWN trash)
+                    Bp = dg.gidx.shape[0]
+                    dg.P = self.factor_ext[:, sgidx].reshape(
+                        M * Bp, g.Lp, g.Wp
+                    )
+                    shift = (jnp.arange(M) * (n + 1))[:, None, None]
+                    dg.cols = (dg.cols[None] + shift).reshape(M * Bp, -1)
+                    dg.tails = (dg.tails[None] + shift).reshape(M * Bp, -1)
+                else:
+                    dg.P = self.factor_ext[sgidx]
                 dg.Dinv = self.eng.invert_diag(dg.P)
 
     def read_into(self, host_storage: np.ndarray) -> None:
         """One bulk device->host transfer of the (factored) packed panels."""
         self.finalize()
         packed = self.eng.get(self.factor_ext)
-        host_storage[self.plan.cells_concat] = packed[:-2]
+        host_storage[..., self.plan.cells_concat] = packed[..., :-2]
 
 
-def device_solve(dstore: DevicePanelStore, b: np.ndarray) -> np.ndarray:
-    """Solve A x = b with the device-resident factor: level-scheduled batched
-    forward/backward substitution, ONE RHS upload and ONE solution download.
-
-    The RHS block lives on the device as a (n+1, nrhs) buffer (last row =
-    trash); each LEVEL runs as one jitted dispatch chaining its groups'
-    batched Dinv-GEMM diagonal steps (triangular blocks are inverted once at
-    finalize — through kernels/trsm.py on the pallas backend) and gathered
-    tail GEMM updates, forward up the levels then backward down them.
-    """
-    dstore.ensure_solve_ready()
-    sym, eng = dstore.sym, dstore.eng
-    y = np.asarray(b, dtype=np.float64)
-    squeeze = y.ndim == 1
-    if squeeze:
-        y = y[:, None]
-    yp = np.zeros((sym.n + 1, y.shape[1]), dtype=np.float64)
-    yp[:sym.n] = y[sym.perm]
-    dy = eng.put(yp)
-    groups = dstore.groups
+def _solve_levels(dstore: DevicePanelStore, dy):
+    """Run the forward then backward substitution levels on a staged RHS."""
+    eng, groups, trash = dstore.eng, dstore.groups, dstore.trash
     for lvl in range(len(groups)):                 # forward: L z = P b
         row = groups[lvl]
-        dy = eng.solve_fwd_level(dy, [g.P for g in row], [g.Dinv for g in row],
+        dy = eng.solve_fwd_level(dy, trash,
+                                 [g.P for g in row], [g.Dinv for g in row],
                                  [g.cols for g in row], [g.tails for g in row])
     for lvl in range(len(groups) - 1, -1, -1):     # backward: L^T x = z
         row = groups[lvl]
-        dy = eng.solve_bwd_level(dy, [g.P for g in row], [g.Dinv for g in row],
+        dy = eng.solve_bwd_level(dy, trash,
+                                 [g.P for g in row], [g.Dinv for g in row],
                                  [g.cols for g in row], [g.tails for g in row])
-    z = eng.get(dy)[:sym.n]
-    x = np.empty_like(z)
-    x[sym.perm] = z
-    return x[:, 0] if squeeze else x
+    return dy
+
+
+def device_solve(dstore: DevicePanelStore, b) -> np.ndarray:
+    """Solve A x = b with the device-resident factor: level-scheduled batched
+    forward/backward substitution.
+
+    A HOST RHS (np.ndarray) costs ONE upload and ONE download; a RESIDENT
+    RHS (a jax array already on the device) costs ZERO transfers — it is
+    permuted into the padded solve layout by a device program
+    (``eng.stage_rhs``) and the solution comes back as a resident array, so
+    iterative callers (Newton steps, multi-RHS streams) chain solves without
+    touching the host.  The staged RHS is (nmat*(n+1), nrhs) — one trash row
+    per matrix; each LEVEL runs as one jitted dispatch chaining its groups'
+    batched Dinv-GEMM diagonal steps (triangular blocks are inverted once at
+    finalize — through kernels/trsm.py on the pallas backend) and gathered
+    tail GEMM updates, forward up the levels then backward down them.  With
+    ``nmat`` > 1, ``b`` is (nmat, n, nrhs) (or (nmat, n)) and all matrices
+    solve in the same dispatches.
+    """
+    dstore.ensure_solve_ready()
+    sym, eng, M = dstore.sym, dstore.eng, dstore.nmat
+    n = sym.n
+    if not isinstance(b, np.ndarray):
+        # resident path: permute on the device, return a resident array
+        squeeze = b.ndim == (1 if M == 1 else 2)
+        y = b[..., None] if squeeze else b
+        flat = y.reshape(M * n, y.shape[-1])
+        dy = eng.stage_rhs(flat, dstore._iperm, dstore.trash)
+        dy = _solve_levels(dstore, dy)
+        x = eng.unstage_rhs(dy, dstore._operm).reshape(y.shape)
+        return x[..., 0] if squeeze else x
+    y = np.asarray(b, dtype=np.float64)
+    squeeze = y.ndim == (1 if M == 1 else 2)
+    if squeeze:
+        y = y[..., None]
+    k = y.shape[-1]
+    if M > 1:
+        yp = np.zeros((M, n + 1, k))
+        yp[:, :n] = y[:, sym.perm]
+        dy = eng.put(yp.reshape(M * (n + 1), k))
+        z = eng.get(_solve_levels(dstore, dy))
+        z = z.reshape(M, n + 1, k)[:, :n]
+        x = np.empty_like(z)
+        x[:, sym.perm] = z
+    else:
+        yp = np.zeros((n + 1, k))
+        yp[:n] = y[sym.perm]
+        dy = eng.put(yp)
+        z = eng.get(_solve_levels(dstore, dy))[:n]
+        x = np.empty_like(z)
+        x[sym.perm] = z
+    return x[..., 0] if squeeze else x

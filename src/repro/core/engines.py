@@ -32,6 +32,8 @@ single vmapped fused POTRF+TRSM+SYRK dispatch, and ``read_panels_batch`` /
 """
 from __future__ import annotations
 
+from collections import deque
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -187,7 +189,7 @@ class DeviceEngine:
     name = "device"
 
     def __init__(self, backend: str | None = "xla", fused: bool = True,
-                 fused_groups: bool = True):
+                 fused_groups: bool = True, events_cap: int = 4096):
         self.backend = backend if backend is not None else kops.default_backend()
         self.fused = fused
         self.fused_groups = fused_groups
@@ -197,8 +199,13 @@ class DeviceEngine:
         # async double-buffering evidence (repro.core.device_store issues
         # the level-(k+1) chunk upload before dispatching level k; tests
         # and benchmarks assert the order here).  Deliberately NOT in
-        # ``stats``: callers zero that dict wholesale between runs.
-        self.events: list = []
+        # ``stats``: callers zero that dict wholesale between runs.  A
+        # long-lived serving engine factors thousands of times, so the log
+        # is (a) reset at the start of every device-resident factorization
+        # (``reset_events``) and (b) ring-buffered at ``events_cap`` as a
+        # backstop for drivers that never reset — it must not grow without
+        # bound.
+        self.events: deque = deque(maxlen=events_cap)
         # compiled programs keyed by (kind, *bucket shape).  A plain dict on
         # the instance (NOT functools.lru_cache on bound methods, which pins
         # ``self`` in the global cache forever) so the jit cache dies with
@@ -207,6 +214,12 @@ class DeviceEngine:
 
     def _event(self, tag: str, lvl: int) -> None:
         self.events.append((tag, lvl))
+
+    def reset_events(self) -> None:
+        """Start a fresh event log (called at the top of each device-resident
+        factorization so the async-order assertions always see exactly one
+        run, and serving engines don't accumulate logs across requests)."""
+        self.events.clear()
 
     def _program(self, key, build):
         fn = self._programs.get(key)
@@ -451,6 +464,52 @@ class DeviceEngine:
             lambda: jax.jit(f, donate_argnums=1),
         )
 
+    def _fused_group_many_fn(self, M: int, Bp: int, Lp: int, Wp: int,
+                             clen: int, r: int, n_in: int, n_out: int):
+        """Multi-matrix fused group program: the single-matrix
+        ``_fused_group_fn`` with a leading matrix axis on every value buffer
+        (``chunk`` (M, clen), ``pool`` (M, pool)) and the SAME index arrays
+        for all M matrices — one pattern, M value streams.  The M stacked
+        panel buffers collapse into one (M*Bp, Lp, Wp) batch so the factor
+        runs as ONE dispatch of M*Bp lanes instead of M dispatches of Bp:
+        per-group dispatch/driver overhead is paid once per group, not once
+        per (matrix, group)."""
+        backend = self.backend
+        one = self._one_factor_syrk(Lp, Wp)
+
+        def f(chunk, pool, lb, off, src, lo, hi, gidx, rows, ws, ppack, upack):
+            pc = jax.lax.dynamic_slice(chunk, (0, lb), (M, r))
+            if n_in:
+                vals = pool[:, src]   # (M, n_in) destination-sorted entries
+                C = jnp.concatenate(
+                    [jnp.zeros((M, 1), pool.dtype), jnp.cumsum(vals, axis=1)],
+                    axis=1,
+                )
+                pc = pc - (C[:, hi] - C[:, lo])
+            ext = jnp.concatenate(
+                [pc, jnp.zeros((M, 1), pc.dtype), jnp.ones((M, 1), pc.dtype)],
+                axis=1,
+            )
+            buf = ext[:, gidx].reshape(M * Bp, Lp, Wp)
+            if backend == "pallas":
+                fp, u = fused_factor_syrk(
+                    buf, jnp.tile(rows, M), jnp.tile(ws, M),
+                    interpret=kops._interpret(),
+                )
+            else:
+                fp, u = jax.vmap(one)(buf)
+            packed = fp.reshape(M, -1)[:, ppack]
+            if n_out:
+                pool = jax.lax.dynamic_update_slice(
+                    pool, u.reshape(M, -1)[:, upack], (0, off)
+                )
+            return packed, pool
+
+        return self._program(
+            ("fused_group_many", M, Bp, Lp, Wp, clen, r, n_in, n_out),
+            lambda: jax.jit(f, donate_argnums=1),
+        )
+
     # Solve programs run one WHOLE LEVEL per dispatch: a level's groups are
     # independent (antichain), so their updates chain on the donated y inside
     # one program — dispatch count is O(levels), not O(levels x buckets).
@@ -461,10 +520,13 @@ class DeviceEngine:
     # GEMMs (MAGMA's trsm strategy, same as kernels/trsm.py, and Li's
     # batched-TRSV result for sparse triangular solves on GPUs) — thousands
     # of tiny per-supernode triangular solves per solve call become a few
-    # matmuls per level.  ``y`` is (n+1, nrhs) with a trash row at index n.
-    # Pad reads hit the trash row, but the identity extensions and zero pad
-    # rows/columns of P keep that junk out of every real row; the trash row
-    # is reset once per level only to keep its values finite.
+    # matmuls per level.  ``y`` is (n+1, nrhs) with a trash row at index n —
+    # or, for an M-matrix batch, (M*(n+1), nrhs) with one trash row per
+    # matrix (the ``trash`` argument lists them; the same level programs
+    # serve both cases).  Pad reads hit the trash row, but the identity
+    # extensions and zero pad rows/columns of P keep that junk out of every
+    # real row; the trash rows are reset once per level only to keep their
+    # values finite.
     def _invert_diag_fn(self, Bp: int, Wp: int):
         """Invert a group's stacked triangular diagonal blocks (finalize-time
         only; the pallas backend routes through the kernels' TRSM)."""
@@ -482,12 +544,12 @@ class DeviceEngine:
 
         return self._program(("invert_diag", Bp, Wp), lambda: jax.jit(f))
 
-    def _solve_fwd_fn(self, shapes: tuple, nrhs: int):
+    def _solve_fwd_fn(self, shapes: tuple, nrhs: int, ntrash: int):
         """Forward substitution for one level: per group one batched
         Dinv-GEMM for the diagonal blocks + one batched GEMM scatter-add of
         the tails."""
 
-        def f(y, Ps, Dinvs, colss, tailss):
+        def f(y, trash, Ps, Dinvs, colss, tailss):
             for P, Dinv, cols, tails in zip(Ps, Dinvs, colss, tailss):
                 Lp, Wp = P.shape[1], P.shape[2]
                 z = Dinv @ y[cols]                  # (Bp, Wp, nrhs)
@@ -495,16 +557,17 @@ class DeviceEngine:
                 if Lp > Wp:
                     u = P[:, Wp:, :] @ z            # (Bp, Lp-Wp, nrhs)
                     y = y.at[tails.reshape(-1)].add(-u.reshape(-1, u.shape[2]))
-            return y.at[y.shape[0] - 1].set(0.0)    # reset the trash row
+            return y.at[trash].set(0.0)             # reset the trash row(s)
 
         return self._program(
-            ("solve_fwd", shapes, nrhs), lambda: jax.jit(f, donate_argnums=0)
+            ("solve_fwd", shapes, nrhs, ntrash),
+            lambda: jax.jit(f, donate_argnums=0),
         )
 
-    def _solve_bwd_fn(self, shapes: tuple, nrhs: int):
+    def _solve_bwd_fn(self, shapes: tuple, nrhs: int, ntrash: int):
         """Backward substitution for one level."""
 
-        def f(y, Ps, Dinvs, colss, tailss):
+        def f(y, trash, Ps, Dinvs, colss, tailss):
             for P, Dinv, cols, tails in zip(Ps, Dinvs, colss, tailss):
                 Lp, Wp = P.shape[1], P.shape[2]
                 r = y[cols]                         # (Bp, Wp, nrhs)
@@ -512,11 +575,33 @@ class DeviceEngine:
                     r = r - P[:, Wp:, :].transpose(0, 2, 1) @ y[tails]
                 z = Dinv.transpose(0, 2, 1) @ r     # (L^T)^{-1} = (L^{-1})^T
                 y = y.at[cols.reshape(-1)].set(z.reshape(-1, z.shape[2]))
-            return y.at[y.shape[0] - 1].set(0.0)
+            return y.at[trash].set(0.0)
 
         return self._program(
-            ("solve_bwd", shapes, nrhs), lambda: jax.jit(f, donate_argnums=0)
+            ("solve_bwd", shapes, nrhs, ntrash),
+            lambda: jax.jit(f, donate_argnums=0),
         )
+
+    def _stage_rhs_fn(self, n: int, nt: int):
+        """Device-side RHS staging: permute a resident (n*, k) right-hand
+        side into the padded solve layout (one trash row per matrix) without
+        any host round trip — ``iperm`` maps padded row i to its source row
+        (trash rows map to an arbitrary source; they are zeroed)."""
+
+        def f(b, iperm, trash):
+            y = b[iperm]
+            return y.at[trash].set(0.0)
+
+        return self._program(("stage_rhs", n, nt), lambda: jax.jit(f))
+
+    def _unstage_rhs_fn(self, n: int, nt: int):
+        """Inverse of ``_stage_rhs_fn``: read the solution out of the padded
+        solve layout back into natural row order, dropping trash rows."""
+
+        def f(y, operm):
+            return y[operm]
+
+        return self._program(("unstage_rhs", n, nt), lambda: jax.jit(f))
 
     # -- engine protocol ----------------------------------------------------
     @staticmethod
@@ -724,26 +809,57 @@ class DeviceEngine:
         return fn(chunk, pool, g.lb, g.off, g.src, g.lo, g.hi, g.gidx,
                   g.rows, g.ws, g.ppack, g.upack)
 
+    def fused_group_many(self, chunk, pool, g, lvl: int = -1):
+        """Multi-matrix ``fused_group``: M value streams (leading axis on
+        ``chunk``/``pool``) through one pattern's index arrays, factored as
+        ONE dispatch of M*Bp lanes.  Zero transfers."""
+        self.stats["device_calls"] += 1
+        self._event("dispatch", lvl)
+        M = int(chunk.shape[0])
+        Bp, Lp, Wp = g.gidx.shape
+        fn = self._fused_group_many_fn(
+            M, Bp, Lp, Wp, int(chunk.shape[1]), int(g.ppack.shape[0]),
+            int(g.src.shape[0]), int(g.upack.shape[0])
+        )
+        return fn(chunk, pool, g.lb, g.off, g.src, g.lo, g.hi, g.gidx,
+                  g.rows, g.ws, g.ppack, g.upack)
+
     def invert_diag(self, P):
         """Invert one group's stacked diagonal blocks (finalize-time)."""
         self.stats["device_calls"] += 1
         Bp, Lp, Wp = P.shape
         return self._invert_diag_fn(Bp, Wp)(P[:, :Wp, :])
 
-    def solve_fwd_level(self, y, Ps, Dinvs, colss, tailss):
+    def solve_fwd_level(self, y, trash, Ps, Dinvs, colss, tailss):
         """One forward-substitution level against the device-resident RHS."""
         self.stats["device_calls"] += 1
         shapes = tuple(P.shape for P in Ps)
-        return self._solve_fwd_fn(shapes, int(y.shape[1]))(
-            y, Ps, Dinvs, colss, tailss
+        return self._solve_fwd_fn(shapes, int(y.shape[1]), int(trash.shape[0]))(
+            y, trash, Ps, Dinvs, colss, tailss
         )
 
-    def solve_bwd_level(self, y, Ps, Dinvs, colss, tailss):
+    def solve_bwd_level(self, y, trash, Ps, Dinvs, colss, tailss):
         """One backward-substitution level against the device-resident RHS."""
         self.stats["device_calls"] += 1
         shapes = tuple(P.shape for P in Ps)
-        return self._solve_bwd_fn(shapes, int(y.shape[1]))(
-            y, Ps, Dinvs, colss, tailss
+        return self._solve_bwd_fn(shapes, int(y.shape[1]), int(trash.shape[0]))(
+            y, trash, Ps, Dinvs, colss, tailss
+        )
+
+    def stage_rhs(self, b, iperm, trash):
+        """Permute a device-resident RHS into the padded solve layout (zero
+        transfers; counted as a device call)."""
+        self.stats["device_calls"] += 1
+        return self._stage_rhs_fn(int(b.shape[0]), int(trash.shape[0]))(
+            b, iperm, trash
+        )
+
+    def unstage_rhs(self, y, operm):
+        """Read the padded solve layout back to natural order on the device
+        (zero transfers; counted as a device call)."""
+        self.stats["device_calls"] += 1
+        return self._unstage_rhs_fn(int(y.shape[0]), int(operm.shape[0]))(
+            y, operm
         )
 
     def fetch(self, x) -> np.ndarray:

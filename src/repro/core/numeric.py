@@ -282,10 +282,15 @@ class PanelStore:
     panel, only write into it (``panels[s][...] = ...``).
     """
 
-    def __init__(self, sym: SymbolicFactor):
+    def __init__(self, sym: SymbolicFactor, storage: np.ndarray | None = None):
         self.plan = scatter_plan(sym)
-        # one trailing trash cell absorbs the plan's upper-triangle entries
-        self.storage = np.zeros(self.plan.storage_cells, dtype=np.float64)
+        # one trailing trash cell absorbs the plan's upper-triangle entries;
+        # ``storage`` lets callers wrap an existing flat array (the plan
+        # cache's vectorized fill, one row of a multi-matrix batch) in panel
+        # views without copying
+        if storage is None:
+            storage = np.zeros(self.plan.storage_cells, dtype=np.float64)
+        self.storage = storage
         offs = self.plan.offs
         self.panels = [
             self.storage[offs[s]:offs[s + 1]].reshape(
@@ -307,6 +312,11 @@ def init_panel_store(sym: SymbolicFactor, Aperm: sp.csc_matrix) -> PanelStore:
     store = PanelStore(sym)
     _fill_panels(sym, Aperm, store.panels)
     return store
+
+
+def _reset_events(engine) -> None:
+    if hasattr(engine, "reset_events"):
+        engine.reset_events()
 
 
 def _pick_engine(engine, device_engine, policy, sym, s, stats):
@@ -482,11 +492,12 @@ def factorize_levels(
 
 def _factorize_levels_device(
     sym: SymbolicFactor,
-    Aperm: sp.csc_matrix,
+    Aperm: sp.csc_matrix | None,
     device_engine,
     *,
     max_batch: int = 256,
     staging: str | None = None,
+    store: PanelStore | None = None,
 ) -> CholeskyFactor:
     """Fully device-resident level-scheduled factorization: assembly runs on
     the device through precomputed index plans (scatter-free fan-in — see
@@ -500,10 +511,16 @@ def _factorize_levels_device(
     and beyond-tail SYRK tiles outright, so it uses the coarse power-of-two
     ``bucket="fused"`` family (fewer compiles, bigger batches, near-zero
     flop waste).  The xla inner math has no masking — padded cells burn real
-    flops — so it keeps the fine ``bucket="batch"`` family."""
+    flops — so it keeps the fine ``bucket="batch"`` family.
+
+    ``store`` lets the plan-cache path hand in a pre-filled PanelStore
+    (vectorized fill through CachedPlan.fill_storage) so ``Aperm`` may be
+    None; otherwise the store is filled from ``Aperm`` as usual."""
     from repro.core.device_store import DevicePanelStore
 
-    store = init_panel_store(sym, Aperm)
+    _reset_events(device_engine)  # one event log per factorization
+    if store is None:
+        store = init_panel_store(sym, Aperm)
     fused = bool(getattr(device_engine, "fused_groups", False))
     bucket = ("fused"
               if fused and getattr(device_engine, "backend", "") == "pallas"
@@ -540,6 +557,98 @@ def _factorize_levels_device(
     device_engine.flush()
     return CholeskyFactor(
         sym=sym, panels=store.panels, stats=stats, store=store, dstore=dstore
+    )
+
+
+# ---------------------------------------------------------------------------
+# multi-matrix batched factorization (one pattern, M value streams)
+# ---------------------------------------------------------------------------
+@dataclass
+class BatchCholeskyFactor:
+    """M factors of matrices sharing ONE sparsity pattern, produced by a
+    single set of fused multi-matrix dispatches (see ``cholesky_many``).
+
+    ``storage`` is the (M, cells) flat factor block; ``factor(i)`` wraps row
+    i in panel views (a zero-copy CholeskyFactor, usable anywhere a
+    single-matrix factor is).  ``solve`` runs all M right-hand sides through
+    the same level-scheduled device dispatches, against the still-resident
+    device factor."""
+    sym: SymbolicFactor
+    nmat: int
+    storage: np.ndarray       # (M, storage_cells)
+    stats: dict | None = None
+    dstore: object | None = None
+    _factors: list | None = None
+
+    def factor(self, i: int) -> CholeskyFactor:
+        """Zero-copy single-matrix view of factor ``i``."""
+        if self._factors is None:
+            self._factors = [None] * self.nmat
+        f = self._factors[i]
+        if f is None:
+            store = PanelStore(self.sym, storage=self.storage[i])
+            f = self._factors[i] = CholeskyFactor(
+                sym=self.sym, panels=store.panels, stats=self.stats,
+                store=store,
+            )
+        return f
+
+    def solve(self, b: np.ndarray) -> np.ndarray:
+        """Solve A_i x_i = b_i for all M systems at once: ``b`` is
+        (M, n) or (M, n, nrhs) — every substitution level is ONE dispatch
+        covering all matrices.  A resident (jax) ``b`` stays resident:
+        zero transfers, resident result."""
+        from repro.core.device_store import device_solve
+
+        return device_solve(self.dstore, b)
+
+
+def factorize_levels_device_many(
+    sym: SymbolicFactor,
+    storage: np.ndarray,
+    device_engine,
+    *,
+    max_batch: int = 256,
+    staging: str | None = None,
+) -> BatchCholeskyFactor:
+    """Factor M matrices sharing one pattern with ONE set of level-scheduled
+    dispatches: ``storage`` is the (M, cells) pre-filled flat PanelStore
+    block (CachedPlan.fill_storage per row), and every (level x bucket)
+    group runs as a single ``fused_group_many`` dispatch whose batch stacks
+    all M matrices' lanes.  Per-group dispatch/driver overhead — the
+    dominant cost at quick-suite sizes — is paid once per group instead of
+    once per (matrix, group)."""
+    from repro.core.device_store import DevicePanelStore
+
+    _reset_events(device_engine)
+    M = int(storage.shape[0])
+    fused = bool(getattr(device_engine, "fused_groups", False))
+    if not fused:
+        raise ValueError("multi-matrix factorization requires fused groups")
+    bucket = ("fused"
+              if getattr(device_engine, "backend", "") == "pallas"
+              else "batch")
+    sched = cached_schedule(sym, max_batch=max_batch, bucket=bucket)
+    dstore = DevicePanelStore(device_engine, sym, sched, storage,
+                              staging=staging, nmat=M)
+    stats = {
+        "method": "levels_many",
+        "assembly": "device",
+        "staging": dstore.staging,
+        "bucket": bucket,
+        "nmat": M,
+        "supernodes_on_device": sym.nsuper,
+        "supernodes_total": sym.nsuper,
+        "schedule": sched.batch_stats(),
+    }
+    for lvl, lgroups in enumerate(sched.groups):
+        dstore.prefetch_level(lvl + 1)
+        for gi in range(len(lgroups)):
+            dstore.assemble_group(lvl, gi)
+    dstore.read_into(storage)  # ONE bulk read-back of all M factors
+    device_engine.flush()
+    return BatchCholeskyFactor(
+        sym=sym, nmat=M, storage=storage, stats=stats, dstore=dstore
     )
 
 

@@ -18,6 +18,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core import counters
 from repro.core.symbolic import SymbolicFactor
 
 
@@ -128,6 +129,7 @@ class ScatterPlan:
 
 def build_scatter_plan(sym: SymbolicFactor) -> ScatterPlan:
     """Precompute the full assembly plan (symbolic phase; O(update entries))."""
+    counters.bump("scatter_plan")
     ns = sym.nsuper
     offs = np.zeros(ns + 1, dtype=np.int64)
     for s in range(ns):

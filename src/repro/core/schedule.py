@@ -29,6 +29,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core import counters
 from repro.core.engines import bucket_shape, bucket_shape_batch, bucket_shape_fused
 from repro.core.symbolic import SymbolicFactor
 
@@ -119,6 +120,7 @@ def build_schedule(
     cells (default 16M cells = 128 MiB) — so huge buckets get small batches.
     ``bucket`` selects the bucket family (see BUCKET_FNS).
     """
+    counters.bump("schedule")
     bucket_fn = BUCKET_FNS[bucket]
     lev = supernode_levels(sym.sparent)
     nlev = int(lev.max()) + 1 if sym.nsuper else 0

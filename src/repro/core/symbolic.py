@@ -19,6 +19,8 @@ from dataclasses import dataclass, field
 import numpy as np
 import scipy.sparse as sp
 
+from repro.core import counters
+
 
 # ---------------------------------------------------------------------------
 # elimination tree
@@ -254,6 +256,7 @@ def symbolic_analyze(
 
     Returns the SymbolicFactor and the permuted matrix (CSC, full symmetric).
     """
+    counters.bump("symbolic_analyze")
     A = sp.csc_matrix(A)
     n = A.shape[0]
     if order is None:

@@ -1,9 +1,25 @@
-"""Serving driver: batched prefill + decode with fixed-slot continuous
-batching (a request occupies a batch slot from prefill until completion;
-freed slots are immediately refilled from the queue).
+"""Solver-as-a-service driver: a long-lived factorization/solve server.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-        --requests 8 --slots 4 --gen 32
+Production solver workloads (Newton/interior-point outer loops, per-user
+graph Laplacians over a fixed topology, batched covariance solves) are
+request STREAMS dominated by repeated sparsity patterns.  ``CholeskyServer``
+keeps the whole serving state resident across requests:
+
+  * a pattern-keyed PlanCache (repro.core.plan_cache) — a repeat pattern
+    performs ZERO symbolic/schedule/plan rebuilds (enforced against
+    repro.core.counters on every repeat request);
+  * one DeviceEngine whose compiled programs and event log persist across
+    requests (the log is reset per factorization and ring-buffered);
+  * device-resident factors — ``solve`` requests run level-scheduled batched
+    substitution against the still-resident factor, and same-pattern matrix
+    batches factor through ONE set of ``cholesky_many`` dispatches.
+
+The CLI drives a synthetic request stream mixing new-pattern, repeat-pattern
+(single and batched), and solve-only requests, and reports factorizations/sec
+and solves/sec:
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 24 --patterns 3 \
+        --grid 14 --many 4
 """
 from __future__ import annotations
 
@@ -11,134 +27,246 @@ import argparse
 import dataclasses
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
+import scipy.sparse as sp
 
-from repro.configs import get_config, get_smoke_config
-from repro.launch.mesh import make_host_mesh
-from repro.models import LanguageModel, init_cache, set_active_mesh, set_mesh_rules
+from repro.core import cholesky, cholesky_many, counters
+from repro.core.engines import DeviceEngine
+from repro.core.plan_cache import PlanCache
 
 
 @dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray          # (P,) int32
-    max_new: int
-    out: list = dataclasses.field(default_factory=list)
-    done: bool = False
+class ServeStats:
+    """Cumulative request accounting (cache stats live on the PlanCache)."""
+    factorizations: int = 0      # matrices factored (a batch of M counts M)
+    factor_requests: int = 0     # factor/factor_many requests served
+    solves: int = 0              # RHS columns solved
+    solve_requests: int = 0
+    factor_s: float = 0.0        # wall time inside factor requests
+    solve_s: float = 0.0         # wall time inside solve requests
+    repeat_rebuilds: int = 0     # analysis builds triggered by repeat-pattern
+    #                              requests — the zero-rebuild guarantee says
+    #                              this stays 0 forever
+
+    def throughput(self) -> dict:
+        return {
+            "factorizations_per_s": self.factorizations / max(self.factor_s, 1e-9),
+            "solves_per_s": self.solves / max(self.solve_s, 1e-9),
+            "factorizations": self.factorizations,
+            "solves": self.solves,
+            "factor_s": self.factor_s,
+            "solve_s": self.solve_s,
+            "repeat_rebuilds": self.repeat_rebuilds,
+        }
 
 
-class Server:
-    """Slot-based batched server.  All slots share one decode step; each slot
-    keeps its own cache-length (positions are per-slot, attention masks by
-    per-slot length)."""
+class CholeskyServer:
+    """Long-lived sparse-Cholesky service over one resident DeviceEngine.
 
-    def __init__(self, cfg, *, slots: int, max_len: int, mesh_shape=(1, 1), seed=0):
-        self.cfg = cfg
-        self.model = LanguageModel(cfg)
-        self.slots = slots
-        self.max_len = max_len
-        mesh = make_host_mesh(mesh_shape)
-        set_mesh_rules({})
-        set_active_mesh(mesh)
-        self.params = self.model.init(jax.random.PRNGKey(seed))
+    factor(A)        -> handle; repeat patterns hit the plan cache and skip
+                        the symbolic phase entirely
+    factor_many(As)  -> handle; M same-pattern matrices through ONE set of
+                        fused multi-matrix dispatches
+    solve(h, b)      -> solution(s) against the device-resident factor
+                        (resident jax RHS in -> resident solution out,
+                        zero transfers)
+    release(h)          drop a factor (bounded factor store)
+    """
 
-        # one-slot prefill (compiled once), batched decode over all slots
-        self._prefill = jax.jit(
-            lambda p, toks, caches: self.model.prefill(p, toks, caches)
-        )
-        self._decode = jax.jit(
-            lambda p, tok, caches, lens: self._decode_impl(p, tok, caches, lens),
-            donate_argnums=(2,),
-        )
-        self.caches = init_cache(cfg, slots, max_len, jnp.float32)
-        self.lens = jnp.zeros((slots,), jnp.int32)
-        self.cur_tok = jnp.zeros((slots, 1), jnp.int32)
-        self.active: list[Request | None] = [None] * slots
+    def __init__(self, *, cache_dir=None, backend: str | None = "xla",
+                 max_batch: int = 256, staging: str | None = None,
+                 warm_buckets: tuple | None = None):
+        if warm_buckets is None:
+            eff = backend if backend is not None else ""
+            warm_buckets = ("fused",) if eff == "pallas" else ("batch",)
+        self.cache = PlanCache(cache_dir=cache_dir, warm_buckets=warm_buckets)
+        self.engine = DeviceEngine(backend=backend)
+        self.max_batch, self.staging = max_batch, staging
+        self.factors: dict = {}
+        self._next_id = 0
+        self.stats = ServeStats()
 
-    # --- per-slot-length decode ------------------------------------------
-    def _decode_impl(self, params, tok, caches, lens):
-        """Decode one token for every slot; each slot at its own position."""
-        model = self.model
-        cfg = self.cfg
-        B = tok.shape[0]
-        positions = lens[:, None]
-        h, _, new_caches = model.forward(
-            params, tok, caches=caches, cache_len=lens, positions=positions
-        )
-        logits = h[:, -1] @ params["head"].astype(h.dtype)
-        return logits, new_caches
+    # -- request handlers ---------------------------------------------------
+    def _plan_for(self, A):
+        """Plan-cache lookup with the zero-rebuild guarantee enforced: a
+        repeat pattern (memory OR disk hit) must not rebuild anything."""
+        hits0 = self.cache.stats["hits"] + self.cache.stats["disk_hits"]
+        before = counters.snapshot()
+        plan = self.cache.get(A)
+        hit = (self.cache.stats["hits"] + self.cache.stats["disk_hits"]) > hits0
+        if hit:
+            self.stats.repeat_rebuilds += sum(counters.delta(before).values())
+        return plan
 
-    # --- slot management ---------------------------------------------------
-    def _assign(self, slot: int, req: Request):
-        # prefill this request alone (cache written at positions [0, P))
-        P = len(req.prompt)
-        toks = jnp.asarray(req.prompt, jnp.int32)[None]
-        one_cache = init_cache(self.cfg, 1, self.max_len, jnp.float32)
-        logits, one_cache = self._prefill(self.params, toks, one_cache)
-        first = jnp.argmax(logits, -1).astype(jnp.int32)  # (1,)
-        # splice the one-slot cache into slot `slot` of the batched cache
-        def splice(big, small):
-            return big.at[:, slot].set(small[:, 0])
-        self.caches = jax.tree.map(splice, self.caches, one_cache)
-        self.lens = self.lens.at[slot].set(P)
-        self.cur_tok = self.cur_tok.at[slot, 0].set(first[0])
-        req.out.append(int(first[0]))
-        self.active[slot] = req
+    def _store(self, F):
+        fid = self._next_id
+        self._next_id += 1
+        self.factors[fid] = F
+        return fid
 
-    def run(self, requests: list[Request]) -> dict:
-        queue = list(requests)
-        t0 = time.time()
-        decode_steps = 0
-        while queue or any(r is not None for r in self.active):
-            for s in range(self.slots):
-                if self.active[s] is None and queue:
-                    self._assign(s, queue.pop(0))
-            logits, self.caches = self._decode(
-                self.params, self.cur_tok, self.caches, self.lens)
-            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-            self.lens = self.lens + jnp.where(
-                jnp.asarray([r is not None for r in self.active]), 1, 0
-            ).astype(jnp.int32)
-            self.cur_tok = nxt[:, None]
-            decode_steps += 1
-            for s, req in enumerate(self.active):
-                if req is None:
-                    continue
-                req.out.append(int(nxt[s]))
-                if len(req.out) >= req.max_new or int(self.lens[s]) >= self.max_len - 1:
-                    req.done = True
-                    self.active[s] = None
-        dt = time.time() - t0
-        n_tok = sum(len(r.out) for r in requests)
-        return {"wall_s": dt, "tokens": n_tok, "tok_per_s": n_tok / max(dt, 1e-9),
-                "decode_steps": decode_steps}
+    def factor(self, A: sp.spmatrix) -> int:
+        t0 = time.perf_counter()
+        plan = self._plan_for(A)
+        F = cholesky(A, plan=plan, device_engine=self.engine,
+                     max_batch=self.max_batch, staging=self.staging)
+        self.stats.factor_s += time.perf_counter() - t0
+        self.stats.factorizations += 1
+        self.stats.factor_requests += 1
+        return self._store(F)
+
+    def factor_many(self, As) -> int:
+        As = list(As)
+        t0 = time.perf_counter()
+        plan = self._plan_for(As[0])
+        F = cholesky_many(As, plan=plan, device_engine=self.engine,
+                          max_batch=self.max_batch, staging=self.staging)
+        self.stats.factor_s += time.perf_counter() - t0
+        self.stats.factorizations += len(As)
+        self.stats.factor_requests += 1
+        return self._store(F)
+
+    def solve(self, handle: int, b):
+        """Solve against a resident factor.  ``b``: (n,)/(n, k) for a single
+        factor, (M, n)/(M, n, k) for a batch handle; a resident jax array
+        stays resident (zero transfers)."""
+        F = self.factors[handle]
+        t0 = time.perf_counter()
+        if hasattr(F, "nmat"):  # BatchCholeskyFactor
+            x = F.solve(b)
+            ncol = F.nmat * (1 if b.ndim == 2 else int(b.shape[-1]))
+        else:
+            x = F.solve(b, backend="device", engine=self.engine)
+            ncol = 1 if b.ndim == 1 else int(b.shape[-1])
+        self.stats.solve_s += time.perf_counter() - t0
+        self.stats.solves += ncol
+        self.stats.solve_requests += 1
+        return x
+
+    def release(self, handle: int) -> None:
+        self.factors.pop(handle, None)
+
+    def report(self) -> dict:
+        rep = self.stats.throughput()
+        rep["cache"] = dict(self.cache.stats)
+        rep["patterns"] = len(self.cache)
+        rep["engine"] = dict(self.engine.stats)
+        return rep
+
+
+# ---------------------------------------------------------------------------
+# synthetic request stream
+# ---------------------------------------------------------------------------
+def _grid_laplacian(k: int, shift: float) -> sp.csc_matrix:
+    """2-D grid Laplacian + shift*I — one pattern per k, fresh values per
+    shift (the diagonal is in the pattern, so every shift shares the plan)."""
+    from repro.sparse.gen import laplacian_2d
+
+    A = laplacian_2d(k)
+    return sp.csc_matrix(A + shift * sp.eye(A.shape[0]))
+
+
+def synthetic_stream(*, requests: int, patterns: int, grid: int, many: int,
+                     nrhs: int = 4, seed: int = 0) -> list:
+    """A serving trace: each pattern's FIRST factor request is a cache miss;
+    later requests on it are repeat-pattern factors (probability ~1/2),
+    batched repeat-pattern factors (~1/4), or solve-only (~1/4)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(patterns):  # every pattern enters the cache first
+        reqs.append(("factor", i, 1))
+    for _ in range(max(0, requests - patterns)):
+        pat = int(rng.integers(patterns))
+        r = rng.random()
+        if r < 0.5:
+            reqs.append(("factor", pat, 1))
+        elif r < 0.75:
+            reqs.append(("factor_many", pat, many))
+        else:
+            reqs.append(("solve", pat, nrhs))
+    return reqs
+
+
+def run_stream(srv: CholeskyServer, reqs: list, *, grid: int, seed: int = 0,
+               check: bool = True) -> dict:
+    """Execute a synthetic trace against a server; returns the report (with
+    per-kind request counts and, with ``check``, max solve residual)."""
+    rng = np.random.default_rng(seed)
+    last_handle: dict = {}     # pattern -> (handle, A or [As])
+    shift = {}
+    max_resid = 0.0
+    kinds = {"factor": 0, "factor_many": 0, "solve": 0}
+    for kind, pat, m in reqs:
+        k = grid + pat          # distinct grid size per pattern
+        shift[pat] = shift.get(pat, 0.0) + 0.25
+        kinds[kind] += 1
+        if kind == "factor":
+            A = _grid_laplacian(k, 1.0 + shift[pat])
+            h = srv.factor(A)
+            last_handle[pat] = (h, A)
+        elif kind == "factor_many":
+            As = [_grid_laplacian(k, 1.0 + shift[pat] + 0.1 * j)
+                  for j in range(m)]
+            h = srv.factor_many(As)
+            last_handle[pat] = (h, As)
+        else:
+            if pat not in last_handle:
+                continue
+            h, stored = last_handle[pat]
+            if isinstance(stored, list):
+                n = stored[0].shape[0]
+                b = rng.standard_normal((len(stored), n, m))
+            else:
+                n = stored.shape[0]
+                b = rng.standard_normal((n, m))
+            x = srv.solve(h, b)
+            if check:
+                if isinstance(stored, list):
+                    r = max(
+                        float(np.linalg.norm(Ai @ xi - bi)
+                              / max(np.linalg.norm(bi), 1e-30))
+                        for Ai, xi, bi in zip(stored, x, b)
+                    )
+                else:
+                    r = float(np.linalg.norm(stored @ x - b)
+                              / max(np.linalg.norm(b), 1e-30))
+                max_resid = max(max_resid, r)
+    rep = srv.report()
+    rep["requests"] = kinds
+    if check:
+        rep["max_solve_resid"] = max_resid
+    return rep
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--patterns", type=int, default=3)
+    ap.add_argument("--grid", type=int, default=14,
+                    help="smallest grid side; pattern i uses (grid+i)^2 rows")
+    ap.add_argument("--many", type=int, default=4,
+                    help="matrices per batched factor request")
+    ap.add_argument("--nrhs", type=int, default=4)
+    ap.add_argument("--backend", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--cache-dir", default=None,
+                    help="persist plans to disk (cross-process reuse)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
-    rng = np.random.default_rng(0)
-    reqs = [
-        Request(i, rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32),
-                args.gen)
-        for i in range(args.requests)
-    ]
-    srv = Server(cfg, slots=args.slots, max_len=args.max_len)
-    stats = srv.run(reqs)
-    print(f"[serve] {stats['tokens']} tokens in {stats['wall_s']:.2f}s "
-          f"({stats['tok_per_s']:.1f} tok/s, {stats['decode_steps']} batched steps)")
-    for r in reqs[:3]:
-        print(f"  req {r.rid}: {r.out[:12]}...")
+
+    srv = CholeskyServer(cache_dir=args.cache_dir, backend=args.backend)
+    reqs = synthetic_stream(
+        requests=args.requests, patterns=args.patterns, grid=args.grid,
+        many=args.many, nrhs=args.nrhs, seed=args.seed,
+    )
+    rep = run_stream(srv, reqs, grid=args.grid, seed=args.seed)
+    print(f"[serve] {sum(rep['requests'].values())} requests "
+          f"({rep['requests']}) over {rep['patterns']} patterns")
+    print(f"  factorizations: {rep['factorizations']} in {rep['factor_s']:.2f}s "
+          f"({rep['factorizations_per_s']:.2f}/s)")
+    print(f"  solves:         {rep['solves']} RHS in {rep['solve_s']:.2f}s "
+          f"({rep['solves_per_s']:.2f}/s)")
+    print(f"  plan cache:     {rep['cache']} "
+          f"repeat_rebuilds={rep['repeat_rebuilds']}")
+    print(f"  max solve resid: {rep.get('max_solve_resid', float('nan')):.2e}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,169 @@
+"""Plan cache: pattern fingerprinting, vectorized fill plans, save->load->
+factor bit-identity, and the zero-rebuild guarantee for repeat patterns."""
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from conftest import make_spd
+from repro.core import (
+    CachedPlan,
+    DeviceEngine,
+    PlanCache,
+    cholesky,
+    counters,
+    init_panel_store,
+    pattern_fingerprint,
+    symbolic_pipeline,
+)
+from repro.core.plan_cache import build_fill_plan, canonical_csc
+from repro.sparse import elasticity_3d, kkt_like, laplacian_2d, laplacian_3d
+
+GENERATORS = [
+    (laplacian_2d, {"nx": 16}),
+    (laplacian_3d, {"nx": 6}),
+    (elasticity_3d, {"nx": 4}),
+    (kkt_like, {"nx": 12}),
+]
+
+
+def _perturbed(A: sp.csc_matrix, seed: int) -> sp.csc_matrix:
+    """Same pattern, fresh SPD values: scale + diagonal shift."""
+    rng = np.random.default_rng(seed)
+    B = canonical_csc(A).copy()
+    B.data = B.data * (1.0 + 0.01 * rng.standard_normal(B.nnz))
+    B = (B + B.T) * 0.5  # keep symmetry (pattern unchanged: it was symmetric)
+    return sp.csc_matrix(B + B.shape[0] * sp.eye(B.shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# fingerprinting
+# ---------------------------------------------------------------------------
+def test_fingerprint_ignores_values_keys_pattern():
+    A = make_spd(80, 0.05, 0)
+    B = A.copy()
+    B.data = B.data * 3.0 + 1e-3
+    assert pattern_fingerprint(A) == pattern_fingerprint(B)
+    C = make_spd(80, 0.05, 1)  # different pattern
+    assert pattern_fingerprint(A) != pattern_fingerprint(C)
+    D = make_spd(81, 0.05, 0)  # different shape
+    assert pattern_fingerprint(A) != pattern_fingerprint(D)
+
+
+# ---------------------------------------------------------------------------
+# the vectorized fill plan vs the per-supernode Python fill
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("gen,kw", GENERATORS)
+def test_fill_plan_matches_init_panel_store(gen, kw):
+    A = canonical_csc(gen(**kw))
+    sym, Aperm = symbolic_pipeline(A)
+    fill_src, fill_dst = build_fill_plan(sym, A)
+    plan = CachedPlan(key=pattern_fingerprint(A), sym=sym,
+                      fill_src=fill_src, fill_dst=fill_dst,
+                      n=A.shape[0], nnz=int(A.nnz))
+    want = init_panel_store(sym, Aperm).storage
+    got = plan.fill_storage(A)
+    # pure index moves on both paths -> bit-identical
+    np.testing.assert_array_equal(got, want)
+    # and for fresh values over the same pattern
+    A2 = _perturbed(A, 1)
+    sym2, Aperm2 = symbolic_pipeline(A2)  # oracle path re-analyzes
+    np.testing.assert_array_equal(
+        plan.fill_storage(A2), init_panel_store(sym, Aperm2).storage
+    )
+
+
+def test_fill_storage_rejects_wrong_pattern():
+    A = make_spd(60, 0.08, 2)
+    plan = PlanCache().get(A)
+    with pytest.raises(ValueError, match="does not match"):
+        plan.fill_storage(make_spd(61, 0.08, 2))
+
+
+# ---------------------------------------------------------------------------
+# save -> load -> factor round trip, bit-identical, both backends
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("gen,kw", GENERATORS)
+def test_save_load_factor_bit_identical(gen, kw, backend, tmp_path):
+    A = gen(**kw)
+    buckets = ("fused",) if backend == "pallas" else ("batch",)
+    cache = PlanCache(warm_buckets=buckets)
+    plan = cache.get(A)
+    F_mem = cholesky(A, plan=plan, device_engine=DeviceEngine(backend=backend))
+
+    path = plan.save(tmp_path)
+    loaded = CachedPlan.load(path)
+    assert loaded.key == plan.key
+    before = counters.snapshot()
+    F_disk = cholesky(A, plan=loaded,
+                      device_engine=DeviceEngine(backend=backend))
+    # the loaded plan carries every warmed artifact: nothing is rebuilt ...
+    assert counters.delta(before) == {}
+    # ... and the factor is bit-identical to the in-process path
+    np.testing.assert_array_equal(F_disk.store.storage, F_mem.store.storage)
+
+
+def test_save_load_rejects_stale_format(tmp_path):
+    import pickle
+
+    p = tmp_path / "plan_x.pkl"
+    with open(p, "wb") as f:
+        pickle.dump({"version": -1}, f)
+    with pytest.raises(ValueError, match="format version"):
+        CachedPlan.load(p)
+
+
+# ---------------------------------------------------------------------------
+# zero-rebuild guarantee (counter-based)
+# ---------------------------------------------------------------------------
+def test_repeat_pattern_zero_rebuilds():
+    """A repeat-pattern request — cache hit + factor + device solve — must
+    perform ZERO symbolic/scatter/schedule/device-plan/fill-plan builds."""
+    A = laplacian_2d(14)
+    cache = PlanCache()
+    eng = DeviceEngine()
+    plan = cache.get(A)
+    A2 = _perturbed(A, 7)
+    F_warm = cholesky(A2, plan=cache.get(A2), device_engine=eng)
+    F_warm.solve(np.ones(A.shape[0]), backend="device")
+
+    before = counters.snapshot()
+    A3 = _perturbed(A, 8)
+    plan3 = cache.get(A3)
+    assert plan3 is plan
+    F = cholesky(A3, plan=plan3, device_engine=eng)
+    x = F.solve(np.ones(A.shape[0]), backend="device")
+    assert counters.delta(before) == {}, counters.delta(before)
+    assert cache.stats["misses"] == 1 and cache.stats["hits"] >= 2
+    assert np.linalg.norm(A3 @ x - 1.0) < 1e-9
+
+
+def test_disk_hit_skips_analysis(tmp_path):
+    """A second process (fresh PlanCache, same cache_dir) loads the plan
+    from disk instead of re-analyzing: zero builds on its first request."""
+    A = kkt_like(nx=10)
+    c1 = PlanCache(cache_dir=tmp_path)
+    c1.get(A)
+
+    c2 = PlanCache(cache_dir=tmp_path)  # "new process"
+    before = counters.snapshot()
+    plan = c2.get(A)
+    F = cholesky(A, plan=plan, device_engine=DeviceEngine())
+    assert counters.delta(before) == {}
+    assert c2.stats == {"hits": 0, "misses": 0, "disk_hits": 1}
+    b = np.ones(A.shape[0])
+    assert np.linalg.norm(A @ F.solve(b) - b) < 1e-8
+
+
+# ---------------------------------------------------------------------------
+# sym-only reuse (no Aperm, no plan)
+# ---------------------------------------------------------------------------
+def test_cholesky_accepts_sym_without_aperm():
+    A = laplacian_2d(12)
+    sym, Aperm = symbolic_pipeline(A)
+    F_ref = cholesky(A, sym=sym, Aperm=Aperm)
+    before = counters.snapshot()
+    F = cholesky(A, sym=sym)  # Aperm recomputed from sym.perm, no analysis
+    assert counters.delta(before).get("symbolic_analyze", 0) == 0
+    for p1, p2 in zip(F.panels, F_ref.panels):
+        np.testing.assert_array_equal(p1, p2)

@@ -1,41 +1,93 @@
-"""Serving-path tests: slot batching correctness vs single-request decode."""
+"""Serving-path tests: the CholeskyServer request loop — plan-cache reuse,
+resident factors/solves, and the synthetic stream driver."""
 import numpy as np
 import pytest
+import scipy.sparse as sp
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_smoke_config
-from repro.launch.serve import Request, Server
-
-
-def greedy_reference(cfg, server, prompt, n):
-    """Single-request generation through the same model (slots=1 server)."""
-    one = Server(cfg, slots=1, max_len=128, seed=0)
-    one.params = server.params  # share weights
-    req = Request(0, prompt, n)
-    one.run([req])
-    return req.out
+from repro.core import counters
+from repro.launch.serve import (
+    CholeskyServer,
+    run_stream,
+    synthetic_stream,
+    _grid_laplacian,
+)
 
 
-def test_batched_equals_single():
-    cfg = get_smoke_config("llama3.2-1b")
-    srv = Server(cfg, slots=3, max_len=128, seed=0)
-    rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab, 12).astype(np.int32) for _ in range(3)]
-    reqs = [Request(i, p, 8) for i, p in enumerate(prompts)]
-    srv.run(reqs)
-    for i, p in enumerate(prompts):
-        want = greedy_reference(cfg, srv, p, 8)
-        assert reqs[i].out == want, f"request {i} diverged from single-slot decode"
+def test_server_factor_solve_roundtrip():
+    srv = CholeskyServer()
+    A = _grid_laplacian(10, 1.5)
+    h = srv.factor(A)
+    b = np.random.default_rng(0).standard_normal(A.shape[0])
+    x = srv.solve(h, b)
+    assert np.linalg.norm(A @ x - b) / np.linalg.norm(b) < 1e-10
+    assert srv.stats.factorizations == 1
+    assert srv.stats.solves == 1
+    srv.release(h)
+    assert h not in srv.factors
 
 
-def test_more_requests_than_slots():
-    cfg = get_smoke_config("llama3.2-1b")
-    srv = Server(cfg, slots=2, max_len=96, seed=0)
-    rng = np.random.default_rng(1)
-    reqs = [Request(i, rng.integers(0, cfg.vocab, 8).astype(np.int32), 6)
-            for i in range(5)]
-    stats = srv.run(reqs)
-    assert all(len(r.out) == 6 for r in reqs)
-    assert stats["tokens"] == 30
+def test_server_repeat_pattern_zero_rebuilds():
+    """Repeat-pattern requests through the server must never rebuild any
+    symbolic artifact (the server enforces it too, via repeat_rebuilds)."""
+    srv = CholeskyServer()
+    srv.factor(_grid_laplacian(9, 1.0))   # miss: analyzed + warmed
+    before = counters.snapshot()
+    h = srv.factor(_grid_laplacian(9, 2.0))   # repeat pattern, new values
+    srv.solve(h, np.ones(81))
+    assert counters.delta(before) == {}
+    assert srv.stats.repeat_rebuilds == 0
+    assert srv.cache.stats == {"hits": 1, "misses": 1, "disk_hits": 0}
+
+
+def test_server_factor_many_counts_matrices():
+    srv = CholeskyServer()
+    As = [_grid_laplacian(8, 1.0 + 0.5 * i) for i in range(3)]
+    h = srv.factor_many(As)
+    B = np.random.default_rng(1).standard_normal((3, 64, 2))
+    X = srv.solve(h, B)
+    for A, x, b in zip(As, X, B):
+        assert np.linalg.norm(A @ x - b) / np.linalg.norm(b) < 1e-10
+    assert srv.stats.factorizations == 3
+    assert srv.stats.factor_requests == 1
+    assert srv.stats.solves == 6  # 3 matrices x 2 RHS columns
+
+
+def test_server_disk_cache_across_instances(tmp_path):
+    """A fresh server on the same cache_dir serves its first request from
+    the persisted plan: a disk hit, zero analysis builds."""
+    A = _grid_laplacian(9, 1.0)
+    srv1 = CholeskyServer(cache_dir=tmp_path)
+    srv1.factor(A)
+
+    srv2 = CholeskyServer(cache_dir=tmp_path)  # "restarted server"
+    before = counters.snapshot()
+    h = srv2.factor(_grid_laplacian(9, 3.0))
+    assert counters.delta(before) == {}
+    assert srv2.cache.stats["disk_hits"] == 1
+    assert srv2.stats.repeat_rebuilds == 0
+    b = np.ones(81)
+    A2 = _grid_laplacian(9, 3.0)
+    assert np.linalg.norm(A2 @ srv2.solve(h, b) - b) < 1e-9
+
+
+def test_synthetic_stream_shape():
+    reqs = synthetic_stream(requests=20, patterns=3, grid=8, many=4, seed=0)
+    assert len(reqs) == 20
+    # every pattern's first appearance is a plain factor (cache miss)
+    first = {}
+    for kind, pat, _m in reqs:
+        first.setdefault(pat, kind)
+    assert set(first) == {0, 1, 2}
+    assert all(k == "factor" for k in first.values())
+
+
+def test_run_stream_end_to_end():
+    srv = CholeskyServer()
+    reqs = synthetic_stream(requests=10, patterns=2, grid=8, many=2, seed=1)
+    rep = run_stream(srv, reqs, grid=8, seed=1)
+    assert rep["cache"]["misses"] == 2                # one per pattern
+    assert rep["repeat_rebuilds"] == 0                # the service guarantee
+    assert rep["factorizations"] >= 2
+    assert rep["factorizations_per_s"] > 0
+    assert rep["max_solve_resid"] < 1e-9
+    assert sum(rep["requests"].values()) == len(reqs)
