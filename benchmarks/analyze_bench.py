@@ -1,0 +1,67 @@
+"""Static-analysis benchmark: waste ratios + VMEM headroom per bucket.
+
+Runs the repro.analyze static passes over the quick suite (both bucket
+families) — no numeric phase — and reports, per matrix/family, the kernel
+pass's cost-model accounting: padded vs masked flop waste and the worst
+per-bucket VMEM estimate against the 16 MiB reference budget.  The point is
+trend tracking: a schedule/bucketing change that regresses masked waste or
+pushes a bucket's footprint further past the reference shows up here before
+it shows up as wall-clock on hardware.
+
+Emits results/BENCH_analyze.json via ``python -m benchmarks.run --only
+analyze``.
+"""
+from __future__ import annotations
+
+import time
+
+
+def run(suite=None) -> dict:
+    from repro.analyze import analyze_matrix
+    from repro.analyze.findings import report_json
+    import json
+
+    from benchmarks.run import QUICK_SUITE
+    from repro.sparse.gen import make_suite_matrix
+
+    suite = list(suite) if suite is not None else list(QUICK_SUITE)
+    rows = []
+    reports = []
+    for name in suite:
+        A = make_suite_matrix(name)
+        t0 = time.time()
+        rep = analyze_matrix(A, name=name, families=("batch", "fused"))
+        dt = time.time() - t0
+        reports.append(rep)
+        for family, m in rep.metrics["families"].items():
+            rows.append({
+                "matrix": name,
+                "family": family,
+                "n_buckets": len(m["buckets"]),
+                "max_vmem_mib": m["max_vmem_mib"],
+                "min_headroom_ref_mib": min(
+                    (b["headroom_ref_mib"] for b in m["buckets"]),
+                    default=0.0),
+                "padded_waste": m["padded_waste"],
+                "masked_waste": m["masked_waste"],
+                "errors": len(rep.errors),
+                "warnings": len(rep.warnings),
+                "analyze_s": round(dt, 2),
+            })
+    return {"rows": rows,
+            "report": json.loads(report_json(reports))}
+
+
+def table(bench: dict) -> str:
+    hdr = (f"{'matrix':12s} {'family':6s} {'#bkt':>4s} {'vmem_max':>9s} "
+           f"{'headroom':>9s} {'pad_waste':>9s} {'mask_waste':>10s} "
+           f"{'err':>3s} {'warn':>4s}")
+    lines = [hdr]
+    for r in bench["rows"]:
+        lines.append(
+            f"{r['matrix']:12s} {r['family']:6s} {r['n_buckets']:4d} "
+            f"{r['max_vmem_mib']:8.1f}M {r['min_headroom_ref_mib']:8.1f}M "
+            f"{r['padded_waste']:9.3f} {r['masked_waste']:10.3f} "
+            f"{r['errors']:3d} {r['warnings']:4d}"
+        )
+    return "\n".join(lines)

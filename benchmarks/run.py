@@ -109,6 +109,24 @@ def bench_serve() -> dict:
     return bench
 
 
+def bench_analyze(suite) -> dict:
+    """Static-analysis metrics (no numeric phase): per-bucket VMEM headroom
+    vs the 16 MiB reference and padded/masked flop-waste ratios, both bucket
+    families.  Emits results/BENCH_analyze.json."""
+    from benchmarks import analyze_bench
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    bench = analyze_bench.run(suite)
+    print("\n# Analyze — VMEM headroom + waste ratios per bucket family")
+    print(analyze_bench.table(bench))
+    n_err = bench["report"]["errors"]
+    print(f"# analyze findings: {n_err} error(s), "
+          f"{bench['report']['warnings']} warning(s)")
+    out = RESULTS / "BENCH_analyze.json"
+    out.write_text(json.dumps(bench, indent=2))
+    print(f"# machine-readable analyze results -> {out}")
+    return bench
+
+
 def bench_kernels() -> None:
     from benchmarks import kernel_bench
     print("\n# Kernels — name,us_per_call,derived")
@@ -147,7 +165,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     choices=[None, "cholesky", "schedule", "solve", "serve",
-                             "kernels", "roofline"])
+                             "analyze", "kernels", "roofline"])
     args = ap.parse_args()
 
     if args.quick:
@@ -170,6 +188,9 @@ def main() -> None:
         bench_solve(suite if args.full else QUICK_SUITE)
     if args.only in (None, "serve"):
         bench_serve()
+    if args.only in (None, "analyze"):
+        # static passes only — cheap enough to run the quick suite always
+        bench_analyze(suite if args.full else QUICK_SUITE)
     if bench:
         RESULTS.mkdir(parents=True, exist_ok=True)
         out = RESULTS / "BENCH_cholesky.json"

@@ -144,3 +144,22 @@ resid = max(np.linalg.norm(As[i] @ Xm[i] - Bm[i]) / np.linalg.norm(Bm[i])
 print(f"cholesky_many M={M} n={nu}  {t_many:5.3f}s vs {t_each:5.3f}s for "
       f"{M} single factors ({t_each / max(t_many, 1e-9):.1f}x)  "
       f"batched-solve resid={resid:.2e}")
+
+# ---------------------------------------------------------------------------
+# Static analysis: prove the plan stack safe without factoring
+# ---------------------------------------------------------------------------
+# Everything above trusts five layers of precomputed index plans applied
+# with unchecked fancy indexing.  repro.analyze re-derives and verifies them
+# all — scatter/fill/schedule/device-plan lint, staging happens-before,
+# kernel VMEM/alignment budgets, cache-file integrity — without running the
+# numeric phase:
+#
+#     PYTHONPATH=src python -m repro.analyze --all-generators --strict
+#
+# (the CI gate; see src/repro/analyze/README.md).  In-process:
+from repro.analyze import analyze_matrix
+
+report = analyze_matrix(Au, name="quickstart", families=("batch", "fused"))
+print(f"analyze: {report.status()} — {len(report.errors)} errors, "
+      f"{len(report.warnings)} warnings over "
+      f"{len(report.metrics['families'])} bucket families")

@@ -1,0 +1,81 @@
+"""Static analysis of the precomputed-plan stack (see README.md here).
+
+Four passes, each returning structured ``Finding``s, runnable without the
+numeric phase:
+
+    plan lint     repro.analyze.plan_lint     index plans self-consistent
+    hazards       repro.analyze.hazards       happens-before (static + trace)
+    kernel        repro.analyze.kernel_check  VMEM budget / alignment / waste
+    cache         repro.analyze.cache_check   saved-plan integrity
+
+CLI: ``python -m repro.analyze --all-generators --strict`` (the CI gate).
+"""
+from repro.analyze.cache_check import check_plan_file
+from repro.analyze.findings import (
+    AnalysisReport,
+    Finding,
+    PASSES,
+    SEVERITIES,
+    report_json,
+)
+from repro.analyze.hazards import (
+    audit_engine,
+    audit_trace,
+    plan_happens_before,
+    traced_factorization,
+)
+from repro.analyze.kernel_check import (
+    REFERENCE_VMEM,
+    bucket_vmem,
+    check_bucket,
+    check_kernels,
+)
+from repro.analyze.plan_lint import (
+    lint_device_plan,
+    lint_fill_plan,
+    lint_plan_stack,
+    lint_scatter_plan,
+    lint_schedule,
+)
+
+__all__ = [
+    "AnalysisReport", "Finding", "PASSES", "SEVERITIES", "report_json",
+    "audit_engine", "audit_trace", "plan_happens_before",
+    "traced_factorization", "REFERENCE_VMEM", "bucket_vmem", "check_bucket",
+    "check_kernels", "lint_device_plan", "lint_fill_plan", "lint_plan_stack",
+    "lint_scatter_plan", "lint_schedule", "check_plan_file", "analyze_matrix",
+]
+
+
+def analyze_matrix(A, *, name: str = "matrix", families=("batch", "fused"),
+                   vmem_cap: int | None = None, max_batch: int = 256,
+                   trace_backends=(), fill: bool = True) -> AnalysisReport:
+    """Run every static pass over one matrix: symbolic pipeline, then plan
+    lint + static hazard happens-before + kernel checks per bucket family
+    (and, for each backend in ``trace_backends``, one real factorization
+    whose event trace is audited — the only part that runs numerics)."""
+    from repro.core.api import symbolic_pipeline
+    from repro.core.device_store import device_plan
+    from repro.core.plan_cache import build_fill_plan, canonical_csc
+    from repro.core.schedule import cached_schedule
+
+    A = canonical_csc(A)
+    sym, _Aperm = symbolic_pipeline(A)
+    rep = AnalysisReport(target=name)
+    rep.extend(lint_scatter_plan(sym))
+    if fill:
+        fs, fd = build_fill_plan(sym, A)
+        rep.extend(lint_fill_plan(sym, fs, fd, int(A.nnz)))
+    rep.metrics["families"] = {}
+    for family in families:
+        sched = cached_schedule(sym, max_batch=max_batch, bucket=family)
+        gp = device_plan(sym, sched)
+        rep.extend(lint_schedule(sym, sched, bucket=family))
+        rep.extend(lint_device_plan(sym, sched, gp))
+        rep.extend(plan_happens_before(sym, sched, gp))
+        kf, km = check_kernels(sym, sched, family=family, vmem_cap=vmem_cap)
+        rep.extend(kf)
+        rep.metrics["families"][family] = km
+    for backend in trace_backends:
+        rep.extend(traced_factorization(A, backend=backend)[0])
+    return rep

@@ -206,6 +206,19 @@ class DeviceEngine:
         # backstop for drivers that never reset — it must not grow without
         # bound.
         self.events: deque = deque(maxlen=events_cap)
+        # set when the ring buffer drops an event: a truncated trace cannot
+        # PROVE the upload-before-dispatch order, so the hazard checker
+        # (repro.analyze.hazards) reports INCONCLUSIVE instead of PASS
+        self.events_overflowed = False
+        # donated device buffers (the update pool, solve RHS) most recently
+        # consumed by donating programs: passing one to a program again is
+        # an aliasing bug that only *manifests* on hardware that honours
+        # donation (CPU jax silently ignores it), so it is detected here and
+        # logged as a ``donation_reuse`` event for the hazard checker.
+        # Short on purpose: the realistic bug re-passes a *recent* buffer,
+        # and on backends that ignore donation (CPU) the deque would
+        # otherwise keep large dead pools alive.
+        self._donated: deque = deque(maxlen=4)
         # compiled programs keyed by (kind, *bucket shape).  A plain dict on
         # the instance (NOT functools.lru_cache on bound methods, which pins
         # ``self`` in the global cache forever) so the jit cache dies with
@@ -213,13 +226,27 @@ class DeviceEngine:
         self._programs: dict = {}
 
     def _event(self, tag: str, lvl: int) -> None:
+        if (self.events.maxlen is not None
+                and len(self.events) == self.events.maxlen):
+            self.events_overflowed = True
         self.events.append((tag, lvl))
+
+    def _note_donation(self, buf, lvl: int = -1) -> None:
+        """Record that ``buf`` was donated to a device program; log a
+        ``donation_reuse`` event if it had ALREADY been donated (the caller
+        is re-reading a buffer whose storage the runtime may have reused)."""
+        if any(buf is b for b in self._donated):
+            self._event("donation_reuse", lvl)
+        else:
+            self._donated.append(buf)
 
     def reset_events(self) -> None:
         """Start a fresh event log (called at the top of each device-resident
         factorization so the async-order assertions always see exactly one
         run, and serving engines don't accumulate logs across requests)."""
         self.events.clear()
+        self.events_overflowed = False
+        self._donated.clear()
 
     def _program(self, key, build):
         fn = self._programs.get(key)
@@ -788,6 +815,7 @@ class DeviceEngine:
         """Pack one group's factored panels and update entries (in-place pool
         append).  Zero transfers."""
         self.stats["device_calls"] += 1
+        self._note_donation(pool)
         Bp, Lp, Wp = fp.shape
         fn = self._pack_group_fn(
             Bp, Lp, Wp, int(g.ppack.shape[0]), int(g.upack.shape[0])
@@ -800,6 +828,7 @@ class DeviceEngine:
         gather_group/factor_group/pack_group).  Zero transfers; the dispatch
         is logged to ``events`` for the async-staging order assertion."""
         self.stats["device_calls"] += 1
+        self._note_donation(pool, lvl)
         self._event("dispatch", lvl)
         Bp, Lp, Wp = g.gidx.shape
         fn = self._fused_group_fn(
@@ -814,6 +843,7 @@ class DeviceEngine:
         ``chunk``/``pool``) through one pattern's index arrays, factored as
         ONE dispatch of M*Bp lanes.  Zero transfers."""
         self.stats["device_calls"] += 1
+        self._note_donation(pool, lvl)
         self._event("dispatch", lvl)
         M = int(chunk.shape[0])
         Bp, Lp, Wp = g.gidx.shape
@@ -833,6 +863,7 @@ class DeviceEngine:
     def solve_fwd_level(self, y, trash, Ps, Dinvs, colss, tailss):
         """One forward-substitution level against the device-resident RHS."""
         self.stats["device_calls"] += 1
+        self._note_donation(y)
         shapes = tuple(P.shape for P in Ps)
         return self._solve_fwd_fn(shapes, int(y.shape[1]), int(trash.shape[0]))(
             y, trash, Ps, Dinvs, colss, tailss
@@ -841,6 +872,7 @@ class DeviceEngine:
     def solve_bwd_level(self, y, trash, Ps, Dinvs, colss, tailss):
         """One backward-substitution level against the device-resident RHS."""
         self.stats["device_calls"] += 1
+        self._note_donation(y)
         shapes = tuple(P.shape for P in Ps)
         return self._solve_bwd_fn(shapes, int(y.shape[1]), int(trash.shape[0]))(
             y, trash, Ps, Dinvs, colss, tailss

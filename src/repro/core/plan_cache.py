@@ -46,8 +46,11 @@ from repro.core.relind import scatter_plan
 from repro.core.schedule import cached_schedule
 from repro.core.symbolic import SymbolicFactor
 
-#: bump when the CachedPlan layout changes; stale files are rejected on load
-FORMAT_VERSION = 1
+#: bump when the CachedPlan layout changes; stale files are rejected on load.
+#: v2 wraps the payload in an envelope {version, key, digest, blob} whose
+#: blake2b digest detects corrupt/tampered files before anything is unpickled
+#: into the numeric phase.
+FORMAT_VERSION = 2
 
 
 def canonical_csc(A: sp.spmatrix) -> sp.csc_matrix:
@@ -187,33 +190,81 @@ class CachedPlan:
         path = pathlib.Path(path)
         if path.is_dir():
             path = path / f"plan_{self.key}.pkl"
-        payload = {
-            "version": self.version, "key": self.key,
-            "n": self.n, "nnz": self.nnz,
+        blob = pickle.dumps({
+            "key": self.key, "n": self.n, "nnz": self.nnz,
             "sym": self.sym, "fill_src": self.fill_src,
             "fill_dst": self.fill_dst,
+        }, protocol=4)
+        envelope = {
+            "version": FORMAT_VERSION, "key": self.key,
+            "digest": hashlib.blake2b(blob, digest_size=16).hexdigest(),
+            "blob": blob,
         }
         tmp = path.with_suffix(".tmp")
         with open(tmp, "wb") as f:
-            pickle.dump(payload, f, protocol=4)
+            pickle.dump(envelope, f, protocol=4)
         tmp.replace(path)  # atomic publish: concurrent readers never see a
         # half-written plan
         return path
 
     @staticmethod
-    def load(path) -> "CachedPlan":
+    def load(path, *, expect_key: str | None = None,
+             lint: bool = False) -> "CachedPlan":
+        """Load a saved plan, rejecting anything that should not reach the
+        numeric phase: a stale format version, a corrupt/tampered file (the
+        envelope digest no longer matches the payload), or — with
+        ``expect_key`` — a plan for a different sparsity pattern.  These
+        fail HERE with a clear error instead of deep in factorize_levels.
+        ``lint=True`` additionally runs the analyze plan-lint pass over the
+        deserialized plan (repro.analyze pass 4 does this by default)."""
         with open(path, "rb") as f:
-            payload = pickle.load(f)
-        if payload.get("version") != FORMAT_VERSION:
+            envelope = pickle.load(f)
+        if not isinstance(envelope, dict) or envelope.get("version") != FORMAT_VERSION:
+            got = envelope.get("version") if isinstance(envelope, dict) else None
             raise ValueError(
                 f"plan file {path} has format version "
-                f"{payload.get('version')!r}, want {FORMAT_VERSION}"
+                f"{got!r}, want {FORMAT_VERSION}"
             )
-        return CachedPlan(
-            key=payload["key"], sym=payload["sym"],
+        blob = envelope.get("blob")
+        digest = (hashlib.blake2b(blob, digest_size=16).hexdigest()
+                  if isinstance(blob, bytes) else None)
+        if digest is None or digest != envelope.get("digest"):
+            raise ValueError(
+                f"plan file {path} is corrupt: payload digest "
+                f"{digest} does not match envelope digest "
+                f"{envelope.get('digest')!r}"
+            )
+        payload = pickle.loads(blob)
+        key = payload["key"]
+        if key != envelope.get("key"):
+            raise ValueError(
+                f"plan file {path} is corrupt: payload key {key} does not "
+                f"match envelope key {envelope.get('key')!r}"
+            )
+        if expect_key is not None and key != expect_key:
+            raise ValueError(
+                f"plan file {path} holds pattern fingerprint {key}, "
+                f"expected {expect_key} — wrong plan for this matrix"
+            )
+        plan = CachedPlan(
+            key=key, sym=payload["sym"],
             fill_src=payload["fill_src"], fill_dst=payload["fill_dst"],
             n=payload["n"], nnz=payload["nnz"],
         )
+        if lint:
+            from repro.analyze.plan_lint import lint_plan_stack
+
+            warmed = sorted({k[2] for k in (plan.sym.schedules or {})})
+            findings = lint_plan_stack(
+                plan.sym, buckets=tuple(warmed),
+                fill=(plan.fill_src, plan.fill_dst), nnz=plan.nnz,
+            )
+            errors = [f for f in findings if f.severity == "error"]
+            if errors:
+                raise ValueError(
+                    f"plan file {path} failed plan lint: {errors[0]}"
+                )
+        return plan
 
 
 class PlanCache:
@@ -236,6 +287,9 @@ class PlanCache:
         self.warm_buckets = warm_buckets
         self._mem: dict[str, CachedPlan] = {}
         self.stats = {"hits": 0, "misses": 0, "disk_hits": 0}
+        # rejected disk loads (stale format / corrupt / wrong pattern) — kept
+        # out of ``stats`` so existing exact-equality assertions stay valid
+        self.disk_rejects = 0
 
     def __len__(self) -> int:
         return len(self._mem)
@@ -252,11 +306,20 @@ class PlanCache:
             return plan
         path = self._path(key)
         if path is not None and path.exists():
-            plan = CachedPlan.load(path)
-            self.stats["disk_hits"] += 1
-            plan.uses += 1
-            self._mem[key] = plan
-            return plan
+            try:
+                # the key doubles as the pattern fingerprint, so load-time
+                # validation proves the file matches THIS matrix's pattern
+                plan = CachedPlan.load(path, expect_key=key)
+            except (ValueError, pickle.UnpicklingError, EOFError, OSError):
+                # stale format / corrupt / mismatched file: rebuild and
+                # overwrite rather than factoring garbage or crashing a
+                # long-lived server on a cache-format upgrade
+                self.disk_rejects += 1
+            else:
+                self.stats["disk_hits"] += 1
+                plan.uses += 1
+                self._mem[key] = plan
+                return plan
         self.stats["misses"] += 1
         plan = self.build(A, key=key)
         self._mem[key] = plan

@@ -75,7 +75,7 @@ class CholeskyServer:
 
     def __init__(self, *, cache_dir=None, backend: str | None = "xla",
                  max_batch: int = 256, staging: str | None = None,
-                 warm_buckets: tuple | None = None):
+                 warm_buckets: tuple | None = None, verify: bool = False):
         if warm_buckets is None:
             eff = backend if backend is not None else ""
             warm_buckets = ("fused",) if eff == "pallas" else ("batch",)
@@ -85,6 +85,12 @@ class CholeskyServer:
         self.factors: dict = {}
         self._next_id = 0
         self.stats = ServeStats()
+        # opt-in verification (repro.analyze): every NEW pattern's plan stack
+        # is linted before it ever factors, and every factor request's event
+        # trace is audited for staging hazards afterwards.  ERROR findings
+        # raise (don't serve a wrong factor); the rest accumulate here.
+        self.verify = verify
+        self.verify_findings: list = []
 
     # -- request handlers ---------------------------------------------------
     def _plan_for(self, A):
@@ -96,7 +102,39 @@ class CholeskyServer:
         hit = (self.cache.stats["hits"] + self.cache.stats["disk_hits"]) > hits0
         if hit:
             self.stats.repeat_rebuilds += sum(counters.delta(before).values())
+        elif self.verify:
+            self._verify_plan(plan)
         return plan
+
+    # -- opt-in verification ------------------------------------------------
+    def _record_findings(self, findings, what: str) -> None:
+        self.verify_findings.extend(findings)
+        errors = [f for f in findings if f.severity == "error"]
+        if errors:
+            raise RuntimeError(f"verification failed on {what}: {errors[0]}")
+
+    def _verify_plan(self, plan) -> None:
+        """Lint a freshly built plan stack before its first factorization."""
+        from repro.analyze import lint_plan_stack
+
+        warmed = tuple(sorted({k[2] for k in (plan.sym.schedules or {})})) \
+            or tuple(self.cache.warm_buckets)
+        self._record_findings(
+            lint_plan_stack(plan.sym, buckets=warmed,
+                            fill=(plan.fill_src, plan.fill_dst),
+                            nnz=plan.nnz),
+            f"plan {plan.key[:12]}",
+        )
+
+    def _audit_factor(self, F) -> None:
+        """Audit the engine's event trace recorded by this factor request."""
+        from repro.analyze import audit_engine
+
+        stats = getattr(F, "stats", None) or {}
+        self._record_findings(
+            audit_engine(self.engine, staging=stats.get("staging", "async")),
+            "event trace",
+        )
 
     def _store(self, F):
         fid = self._next_id
@@ -109,6 +147,8 @@ class CholeskyServer:
         plan = self._plan_for(A)
         F = cholesky(A, plan=plan, device_engine=self.engine,
                      max_batch=self.max_batch, staging=self.staging)
+        if self.verify:
+            self._audit_factor(F)
         self.stats.factor_s += time.perf_counter() - t0
         self.stats.factorizations += 1
         self.stats.factor_requests += 1
@@ -120,6 +160,8 @@ class CholeskyServer:
         plan = self._plan_for(As[0])
         F = cholesky_many(As, plan=plan, device_engine=self.engine,
                           max_batch=self.max_batch, staging=self.staging)
+        if self.verify:
+            self._audit_factor(F)
         self.stats.factor_s += time.perf_counter() - t0
         self.stats.factorizations += len(As)
         self.stats.factor_requests += 1
@@ -150,6 +192,11 @@ class CholeskyServer:
         rep["cache"] = dict(self.cache.stats)
         rep["patterns"] = len(self.cache)
         rep["engine"] = dict(self.engine.stats)
+        if self.verify:
+            by_sev: dict = {}
+            for f in self.verify_findings:
+                by_sev[f.severity] = by_sev.get(f.severity, 0) + 1
+            rep["verify"] = by_sev
         return rep
 
 
@@ -249,10 +296,14 @@ def main():
     ap.add_argument("--backend", default="xla", choices=["xla", "pallas"])
     ap.add_argument("--cache-dir", default=None,
                     help="persist plans to disk (cross-process reuse)")
+    ap.add_argument("--verify", action="store_true",
+                    help="lint every new pattern's plan stack and audit "
+                         "every factor's event trace (repro.analyze)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    srv = CholeskyServer(cache_dir=args.cache_dir, backend=args.backend)
+    srv = CholeskyServer(cache_dir=args.cache_dir, backend=args.backend,
+                         verify=args.verify)
     reqs = synthetic_stream(
         requests=args.requests, patterns=args.patterns, grid=args.grid,
         many=args.many, nrhs=args.nrhs, seed=args.seed,
@@ -267,6 +318,8 @@ def main():
     print(f"  plan cache:     {rep['cache']} "
           f"repeat_rebuilds={rep['repeat_rebuilds']}")
     print(f"  max solve resid: {rep.get('max_solve_resid', float('nan')):.2e}")
+    if "verify" in rep:
+        print(f"  verification:   findings by severity {rep['verify']}")
 
 
 if __name__ == "__main__":
