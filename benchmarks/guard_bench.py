@@ -1,0 +1,127 @@
+"""Guard benchmark: detection overhead + breakdown-recovery outcomes.
+
+Detection: factors SPD suite matrices on the fully device-resident path with
+``guard="off"`` and ``guard="raise"`` interleaved (best of 3 after a shared
+warmup) so clock drift hits both variants equally.  ``guard="off"`` compiles
+the exact pre-guard program, so the delta is the true cost of the status lane
+plus the host-side reduction and input validation.
+
+Recovery: runs the BREAKDOWN_SUITE through the guard policies and records
+structured outcomes — ``raised`` (BreakdownError with the first broken
+supernode), ``recovered`` (perturb + refinement residual), ``clean`` (no
+false positive on an ill-scaled but SPD matrix).
+
+Emits ``results/BENCH_guard.json``:
+
+    {"detection": [{matrix, n, t_off_s, t_raise_s, overhead}],
+     "recovery":  [{matrix, guard, n, outcome, t_s, resid?, first_broken?,
+                    shifts, n_perturbed, report}]}
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import BreakdownError, DeviceEngine, cholesky, symbolic_pipeline
+from repro.sparse.gen import BREAKDOWN_SUITE, make_suite_matrix
+
+DETECTION_SUITE = ["elast3d_12", "lap3d_24"]
+REPS = 3
+
+
+def _bench_detection(name: str) -> dict:
+    A = make_suite_matrix(name)
+    sym, Aperm = symbolic_pipeline(A)
+    eng = DeviceEngine()
+    kw = dict(sym=sym, Aperm=Aperm, device_engine=eng)
+    # warm both program variants (guard flag is part of the cache key)
+    cholesky(A, guard="off", **kw)
+    cholesky(A, guard="raise", **kw)
+    t_off, t_raise = [], []
+    for _ in range(REPS):  # interleaved so drift hits both variants equally
+        t0 = time.perf_counter()
+        cholesky(A, guard="off", **kw)
+        t_off.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        cholesky(A, guard="raise", **kw)
+        t_raise.append(time.perf_counter() - t0)
+    to, tr = min(t_off), min(t_raise)
+    return {"matrix": name, "n": int(A.shape[0]), "t_off_s": to,
+            "t_raise_s": tr, "overhead": tr / to - 1.0}
+
+
+def _in_range_rhs(A, name: str) -> np.ndarray:
+    """RHS in range(A) so singular/rank-deficient recoveries have a true
+    solution for the residual check."""
+    rng = np.random.default_rng(7)
+    if name.startswith(("neumann", "gram")):
+        return np.asarray(A @ rng.standard_normal(A.shape[0]))
+    return rng.standard_normal(A.shape[0])
+
+
+def _bench_recovery(name: str, guard: str) -> dict:
+    A = make_suite_matrix(name)
+    eng = DeviceEngine()
+    rec = {"matrix": name, "guard": guard, "n": int(A.shape[0])}
+    t0 = time.perf_counter()
+    try:
+        F = cholesky(A, device_engine=eng, guard=guard)
+    except BreakdownError as e:
+        rec.update(outcome="raised", t_s=time.perf_counter() - t0,
+                   first_broken=e.report.first_broken, shifts=e.report.shifts,
+                   n_perturbed=e.report.n_perturbed,
+                   report=e.report.to_dict())
+        return rec
+    rep = F.guard_report
+    if guard != "off" and rep.n_perturbed == 0 and rep.shifts == 0:
+        outcome = "clean"
+    else:
+        outcome = "recovered"
+    b = _in_range_rhs(A, name)
+    x = F.solve(b)
+    resid = float(np.linalg.norm(A @ x - b) / np.linalg.norm(b))
+    rec.update(outcome=outcome, t_s=time.perf_counter() - t0, resid=resid,
+               first_broken=rep.first_broken, shifts=rep.shifts,
+               n_perturbed=rep.n_perturbed, report=rep.to_dict())
+    return rec
+
+
+RECOVERY_CASES = [
+    ("kkt_saddle_64", "raise"),
+    ("kkt_saddle_64", "perturb"),
+    ("neumann_64", "perturb"),
+    ("gram_400", "perturb"),
+    ("badscale_64", "raise"),
+]
+
+
+def run() -> dict:
+    detection = []
+    for name in DETECTION_SUITE:
+        detection.append(_bench_detection(name))
+        print(f"# done guard detection {name}", flush=True)
+    recovery = []
+    for name, guard in RECOVERY_CASES:
+        recovery.append(_bench_recovery(name, guard))
+        print(f"# done guard recovery {name}/{guard}", flush=True)
+    return {"detection": detection, "recovery": recovery}
+
+
+def table(bench: dict) -> str:
+    lines = ["matrix,n,t_off_s,t_raise_s,overhead"]
+    for r in bench["detection"]:
+        lines.append(f"{r['matrix']},{r['n']},{r['t_off_s']:.4f},"
+                     f"{r['t_raise_s']:.4f},{r['overhead'] * 100:.1f}%")
+    lines.append("")
+    lines.append("matrix,guard,n,outcome,first_broken,n_perturbed,resid,t_s")
+    for r in bench["recovery"]:
+        resid = f"{r['resid']:.2e}" if "resid" in r else "-"
+        fb = r["first_broken"] if r["first_broken"] is not None else "-"
+        lines.append(f"{r['matrix']},{r['guard']},{r['n']},{r['outcome']},"
+                     f"{fb},{r['n_perturbed']},{resid},{r['t_s']:.2f}")
+    return "\n".join(lines)
+
+
+# suite names referenced above must stay registered
+assert all(n in BREAKDOWN_SUITE for n, _g in RECOVERY_CASES)

@@ -127,6 +127,23 @@ def bench_analyze(suite) -> dict:
     return bench
 
 
+def bench_guard() -> dict:
+    """Breakdown-guard detection overhead (guard="off" vs guard="raise",
+    interleaved best-of-3) plus recovery outcomes on the BREAKDOWN_SUITE.
+    Emits results/BENCH_guard.json."""
+    from benchmarks import guard_bench
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    bench = guard_bench.run()
+    print("\n# Guard — detection overhead + breakdown recovery")
+    print(guard_bench.table(bench))
+    worst = max(r["overhead"] for r in bench["detection"])
+    print(f"# worst detection overhead: {worst * 100:.1f}%")
+    out = RESULTS / "BENCH_guard.json"
+    out.write_text(json.dumps(bench, indent=2))
+    print(f"# machine-readable guard results -> {out}")
+    return bench
+
+
 def bench_kernels() -> None:
     from benchmarks import kernel_bench
     print("\n# Kernels — name,us_per_call,derived")
@@ -165,7 +182,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     choices=[None, "cholesky", "schedule", "solve", "serve",
-                             "analyze", "kernels", "roofline"])
+                             "analyze", "guard", "kernels", "roofline"])
     args = ap.parse_args()
 
     if args.quick:
@@ -191,6 +208,8 @@ def main() -> None:
     if args.only in (None, "analyze"):
         # static passes only — cheap enough to run the quick suite always
         bench_analyze(suite if args.full else QUICK_SUITE)
+    if args.only in (None, "guard"):
+        bench_guard()
     if bench:
         RESULTS.mkdir(parents=True, exist_ok=True)
         out = RESULTS / "BENCH_cholesky.json"

@@ -163,3 +163,39 @@ report = analyze_matrix(Au, name="quickstart", families=("batch", "fused"))
 print(f"analyze: {report.status()} — {len(report.errors)} errors, "
       f"{len(report.warnings)} warnings over "
       f"{len(report.metrics['families'])} bucket families")
+
+# ---------------------------------------------------------------------------
+# Breakdown safety: guards, recovery, never-crash serving
+# ---------------------------------------------------------------------------
+# Plain Cholesky silently NaN-fills on an indefinite matrix.  The guard
+# layer detects breakdown inside the kernels (a per-lane status row rides
+# in the existing readback — zero extra transfers) and turns it into
+# policy: guard="raise" throws a structured BreakdownError naming the first
+# broken supernode; guard="perturb" boosts broken pivots (recorded in the
+# GuardReport) and refines every solve back to full precision against the
+# ORIGINAL matrix; guard="shift" retries with a growing tau*I shift.
+from repro.core import BreakdownError
+from repro.sparse.gen import kkt_saddle
+
+K = kkt_saddle(16)                     # saddle-point KKT: truly indefinite
+eng3 = DeviceEngine()
+try:
+    cholesky(K, device_engine=eng3, guard="raise")
+except BreakdownError as e:
+    print(f"guard=raise: {e}")
+
+F = cholesky(K, device_engine=eng3, guard="perturb")
+rep = F.guard_report
+bk = np.ones(K.shape[0])
+xk = F.solve(bk)                       # auto-refined (GMRES, preconditioned
+                                       # by the perturbed factor)
+print(f"guard=perturb: {rep.n_perturbed} supernodes perturbed, refined "
+      f"resid={np.linalg.norm(K @ xk - bk) / np.linalg.norm(bk):.2e}")
+
+# The serving layer never crashes on hostile input: every request through
+# CholeskyServer.handle() returns {"ok": ...} with structured errors and
+# degraded-mode counters (breakdowns / bad_inputs / fallbacks) in report().
+# Deterministic fault injection for all of this lives in repro.faults
+# (fail the Nth dispatch -> pallas->xla->host fallback chain; corrupt an
+# upload -> guard detection; poison a plan file -> cache rebuild) — see
+# tests/test_faults.py for the chaos-stream harness.

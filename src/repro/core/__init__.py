@@ -21,6 +21,13 @@ from repro.core.engines import (
     bucket_shape_batch,
     bucket_shape_fused,
 )
+from repro.core.guard import (
+    BadMatrixError,
+    BreakdownError,
+    GuardReport,
+    perturb_threshold,
+    validate_matrix,
+)
 from repro.core.merge import merge_supernodes
 from repro.core.numeric import (
     BatchCholeskyFactor,
@@ -75,6 +82,8 @@ __all__ = [
     "factorize_levels", "factorize_levels_device_many", "factorize_rl",
     "factorize_rlb", "init_panel_store", "init_panels",
     "CachedPlan", "PlanCache", "build_fill_plan", "pattern_fingerprint",
+    "BadMatrixError", "BreakdownError", "GuardReport", "perturb_threshold",
+    "validate_matrix",
     "counters",
     "ancestor_updates", "build_scatter_plan", "count_blas_calls",
     "count_blocks", "scatter_plan", "supernode_blocks",

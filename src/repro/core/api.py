@@ -75,6 +75,7 @@ def cholesky(
     sym: SymbolicFactor | None = None,
     Aperm: sp.csc_matrix | None = None,
     plan=None,
+    guard: str = "off",
 ) -> CholeskyFactor:
     """Factor a sparse SPD matrix.
 
@@ -116,6 +117,24 @@ def cholesky(
                       plan builds, and with a fully-offloading device
                       engine the panel fill runs as one vectorized gather
                       through the plan's fill indices.
+    guard             breakdown policy (repro.core.guard):
+                      'off'     no detection; bit-identical to the unguarded
+                                program (same compiled program cache entry)
+                      'raise'   validate the input, detect non-positive/
+                                nonfinite pivots in-kernel, raise a
+                                BreakdownError naming the first broken
+                                supernode
+                      'perturb' clamp pivots below eps*4096*max|diag(A)|
+                                during elimination (CHOLMOD-style dynamic
+                                perturbation, recorded in the GuardReport);
+                                subsequent solves auto-refine against the
+                                original matrix
+                      'shift'   retry with a growing global diagonal shift
+                                until the factorization is clean; solves
+                                auto-refine against the original matrix.
+                      In-kernel detection ('raise'/'perturb') needs the
+                      fully-offloaded device-resident levels path; the
+                      host paths detect through numpy's LinAlgError.
     """
     if method not in ("rl", "rlb"):
         raise ValueError(f"unknown method {method!r} (want 'rl' or 'rlb')")
@@ -152,6 +171,44 @@ def cholesky(
         raise ValueError(
             "staging applies only to the device-resident levels schedule"
         )
+    if guard not in ("off", "raise", "perturb", "shift"):
+        raise ValueError(
+            f"unknown guard {guard!r} (want 'off', 'raise', 'perturb', or "
+            "'shift')"
+        )
+    gval, gkw = None, {}
+    if guard != "off":
+        from repro.core.guard import perturb_threshold, validate_matrix
+
+        gval = validate_matrix(A)  # raises BadMatrixError on NaN/Inf/asym
+        if guard == "shift":
+            # retry loop over guard='raise' with growing diagonal shifts
+            return _cholesky_shift(
+                A, gval,
+                dict(method=method, device_engine=device_engine,
+                     offload_threshold=offload_threshold, schedule=schedule,
+                     max_batch=max_batch, assembly=assembly, staging=staging,
+                     ordering=ordering, merge=merge, refine=refine,
+                     max_growth=max_growth, sym=sym, plan=plan),
+            )
+        device_resident = (
+            schedule == "levels" and device_engine is not None
+            and assembly != "host"
+            and (assembly == "device" or policy.threshold == 0)
+        )
+        if device_resident:
+            # in-kernel detection: status lanes ride the existing readback
+            if guard == "raise":
+                gkw = dict(guard="raise", guard_thr=0.0, guard_clamp=False)
+            else:
+                gkw = dict(guard="perturb", guard_clamp=True,
+                           guard_thr=perturb_threshold(gval["max_abs_diag"]))
+        elif guard == "perturb":
+            raise ValueError(
+                "guard='perturb' needs in-kernel pivot clamps, i.e. the "
+                "fully-offloaded device-resident levels path (device engine "
+                "+ full offload); use guard='shift' on host paths"
+            )
     if (plan is not None and schedule == "levels" and assembly != "host"
             and device_engine is not None
             and (assembly == "device" or policy.threshold == 0)):
@@ -160,10 +217,11 @@ def cholesky(
         from repro.core.numeric import _factorize_levels_device
 
         store = PanelStore(sym, storage=plan.fill_storage(A))
-        return _factorize_levels_device(
+        F = _factorize_levels_device(
             sym, None, device_engine, max_batch=max_batch, staging=staging,
-            store=store,
+            store=store, **gkw,
         )
+        return F if guard == "off" else _attach_guard(F, A, guard, gval)
     if sym is None:
         sym, Aperm = symbolic_pipeline(
             A, ordering=ordering, merge=merge, refine=refine, max_growth=max_growth
@@ -174,20 +232,106 @@ def cholesky(
         p = sym.perm
         Aperm = sp.csc_matrix(A)[p][:, p].tocsc()
         Aperm.sort_indices()
-    if schedule == "levels":
-        return factorize_levels(
-            sym, Aperm, engine=HostEngine(), device_engine=device_engine,
-            policy=policy, max_batch=max_batch, assembly=assembly,
-            staging=staging,
-        )
-    if method == "rl":
-        return factorize_rl(
-            sym, Aperm, engine=HostEngine(), device_engine=device_engine, policy=policy
-        )
-    return factorize_rlb(
-        sym, Aperm, engine=HostEngine(), device_engine=device_engine,
-        policy=policy, batch_transfers=batch_transfers,
-    )
+    try:
+        if schedule == "levels":
+            F = factorize_levels(
+                sym, Aperm, engine=HostEngine(), device_engine=device_engine,
+                policy=policy, max_batch=max_batch, assembly=assembly,
+                staging=staging, **gkw,
+            )
+        elif method == "rl":
+            F = factorize_rl(
+                sym, Aperm, engine=HostEngine(), device_engine=device_engine,
+                policy=policy,
+            )
+        else:
+            F = factorize_rlb(
+                sym, Aperm, engine=HostEngine(), device_engine=device_engine,
+                policy=policy, batch_transfers=batch_transfers,
+            )
+    except np.linalg.LinAlgError as e:
+        # host-path breakdown detection: numpy's potrf failure, upgraded to
+        # the same structured error the in-kernel guards raise
+        if guard == "off":
+            raise
+        from repro.core.guard import BreakdownError, GuardReport
+
+        rep = GuardReport(guard=guard, n_supernodes=int(sym.nsuper),
+                          min_pivot=float("nan"), validation=gval)
+        rep.broken.append({"supernode": None, "level": None,
+                           "min_pivot": float("nan"), "nonfinite": False})
+        raise BreakdownError(rep, f"Cholesky breakdown: {e}") from e
+    return F if guard == "off" else _attach_guard(F, A, guard, gval)
+
+
+def _attach_guard(F: CholeskyFactor, A, guard: str, val) -> CholeskyFactor:
+    """Finish a guarded factorization: attach validation info, raise on
+    unrecovered breakdown, and record the original matrix whenever solves
+    must refine against it (perturbed or shifted factors)."""
+    from repro.core.guard import BreakdownError, GuardReport
+
+    rep = F.guard_report
+    if rep is None:
+        # host path factored cleanly (potrf would have raised otherwise):
+        # synthesize a clean report with the true min pivot from the panels
+        rep = GuardReport(guard=guard, n_supernodes=int(F.sym.nsuper))
+        m = float("inf")
+        for s in range(F.sym.nsuper):
+            w = F.sym.width(s)
+            d = np.diagonal(F.panels[s][:w, :w])
+            if w:
+                m = min(m, float(np.min(d * d)))
+        rep.min_pivot = m
+        F.guard_report = rep
+    rep.guard = guard
+    rep.validation = val
+    if not rep.ok:
+        raise BreakdownError(rep)
+    if rep.needs_refine:
+        F.guard_A = sp.csc_matrix(A)
+    return F
+
+
+def _cholesky_shift(A, val, kw):
+    """guard='shift' recovery: refactor with a growing global diagonal shift
+    A + tau*I until the guarded factorization comes back clean.  Works on
+    every execution path (detection via guard='raise').  Solves against the
+    returned factor auto-refine toward the ORIGINAL unshifted system."""
+    from repro.core.guard import BreakdownError, perturb_threshold
+
+    A = sp.csc_matrix(A)
+    n = int(A.shape[0])
+    tau0 = max(perturb_threshold(val["max_abs_diag"]),
+               float(np.finfo(np.float64).tiny))
+    tau, shifts, last = 0.0, 0, None
+    for _ in range(30):  # 10x per step: overshoots the minimal shift by <10x
+        Ak = A if tau == 0.0 else (A + tau * sp.eye(n, format="csc")).tocsc()
+        try:
+            kwk = kw if tau == 0.0 else dict(kw, plan=None)  # pattern may gain diag
+            if kwk.get("plan") is None and kw.get("plan") is not None:
+                kwk["sym"] = kw["plan"].sym if kw.get("sym") is None else kw["sym"]
+            F = cholesky(Ak, guard="raise", **kwk)
+        except BreakdownError as e:
+            last = e
+            shifts += 1
+            tau = tau0 * (10.0 ** (shifts - 1))
+            continue
+        rep = F.guard_report
+        rep.guard = "shift"
+        rep.shift = float(tau)
+        rep.shifts = shifts
+        rep.validation = val
+        if tau > 0.0:
+            F.guard_A = A  # refine solves back to the unshifted system
+        return F
+    rep = last.report
+    rep.guard = "shift"
+    rep.shift = float(tau)
+    rep.shifts = shifts
+    raise BreakdownError(
+        rep, f"shift recovery failed after {shifts} shifts "
+        f"(last tau = {tau:.3g}): {last}"
+    ) from last
 
 
 def cholesky_many(
@@ -201,6 +345,7 @@ def cholesky_many(
     refine: bool = True,
     max_batch: int = 256,
     staging: str | None = None,
+    guard: str = "off",
 ) -> BatchCholeskyFactor:
     """Factor M sparse SPD matrices sharing ONE sparsity pattern with a
     single set of device dispatches.
@@ -230,6 +375,26 @@ def cholesky_many(
     As = list(As)
     if not As:
         raise ValueError("cholesky_many needs at least one matrix")
+    if guard not in ("off", "raise", "perturb"):
+        raise ValueError(
+            f"unknown guard {guard!r} for cholesky_many (want 'off', "
+            "'raise', or 'perturb'; 'shift' is single-matrix only)"
+        )
+    gvals, gkw = None, {}
+    if guard != "off":
+        from repro.core.guard import perturb_threshold, validate_matrix
+
+        gvals = [validate_matrix(Ai) for Ai in As]
+        if guard == "raise":
+            gkw = dict(guard="raise")
+        else:
+            # one thr per fused dispatch covers all M lanes: use the most
+            # conservative (largest-diagonal) matrix's threshold
+            gkw = dict(
+                guard="perturb", guard_clamp=True,
+                guard_thr=max(perturb_threshold(v["max_abs_diag"])
+                              for v in gvals),
+            )
     if plan is None:
         if sym is None:
             sym, _Aperm = symbolic_pipeline(
@@ -251,9 +416,24 @@ def cholesky_many(
     storage = np.zeros((M, cells), dtype=np.float64)
     for i, A in enumerate(As):
         plan.fill_storage(A, row=storage[i])
-    return factorize_levels_device_many(
-        plan.sym, storage, device_engine, max_batch=max_batch, staging=staging
+    BF = factorize_levels_device_many(
+        plan.sym, storage, device_engine, max_batch=max_batch,
+        staging=staging, **gkw,
     )
+    if guard != "off":
+        from repro.core.guard import BreakdownError
+
+        for rep, v in zip(BF.guard_reports, gvals):
+            rep.validation = v
+        bad = [r for r in BF.guard_reports if not r.ok]
+        if bad:
+            raise BreakdownError(bad[0])
+        if guard == "perturb":
+            BF.guard_As = [
+                sp.csc_matrix(Ai) if rep.needs_refine else None
+                for Ai, rep in zip(As, BF.guard_reports)
+            ]
+    return BF
 
 
 def solve(A: sp.spmatrix, b: np.ndarray, *, solve_backend: str = "host",

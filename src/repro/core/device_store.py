@@ -306,7 +306,9 @@ class DevicePanelStore:
 
     def __init__(self, eng, sym: SymbolicFactor, sched: LevelSchedule,
                  host_storage: np.ndarray, *, factored: bool = False,
-                 staging: str | None = None, nmat: int = 1):
+                 staging: str | None = None, nmat: int = 1,
+                 guard: bool = False, guard_thr: float = 0.0,
+                 guard_clamp: bool = False):
         """``nmat`` > 1 selects the MULTI-MATRIX layout: ``host_storage`` is
         (nmat, cells) — nmat value streams over ONE sparsity pattern — and
         every value buffer (chunks, pool, factor_ext) carries a leading
@@ -331,6 +333,19 @@ class DevicePanelStore:
         self.plan = gp
         self.nmat = int(nmat)
         self.fused = (not factored) and bool(getattr(eng, "fused_groups", False))
+        # breakdown detection: every guarded dispatch also returns per-lane
+        # status rows, accumulated device-side and piggybacked onto the ONE
+        # read_into transfer (zero extra transfers)
+        self.guard = bool(guard)
+        self.guard_thr = float(guard_thr)
+        self.guard_clamp = bool(guard_clamp)
+        self._status: list = []
+        self._status_host = None
+        if self.guard and not (factored or self.fused):
+            raise ValueError(
+                "guarded factorization needs fused groups (the "
+                "three-dispatch fallback emits no status lanes)"
+            )
         if self.nmat > 1 and not (factored or self.fused):
             raise ValueError(
                 "multi-matrix factorization needs fused groups (the "
@@ -456,7 +471,14 @@ class DevicePanelStore:
             if self.staging == "async" and self._chunks[lvl] is None:
                 self.prefetch_level(lvl)  # direct callers without a driver
             run = eng.fused_group_many if self.nmat > 1 else eng.fused_group
-            packed, self.pool = run(self._chunks[lvl], self.pool, g, lvl)
+            if self.guard:
+                packed, self.pool, st = run(
+                    self._chunks[lvl], self.pool, g, lvl, guard=True,
+                    thr=self.guard_thr, clamp=self.guard_clamp
+                )
+                self._status.append(st)
+            else:
+                packed, self.pool = run(self._chunks[lvl], self.pool, g, lvl)
         else:
             buf = eng.gather_group(self.storage0, self.pool, g)
             fp, u = eng.factor_group(buf, g.rows, g.ws)
@@ -543,10 +565,48 @@ class DevicePanelStore:
                 dg.Dinv = self.eng.invert_diag(dg.P)
 
     def read_into(self, host_storage: np.ndarray) -> None:
-        """One bulk device->host transfer of the (factored) packed panels."""
+        """One bulk device->host transfer of the (factored) packed panels.
+        Guarded factorizations concatenate the per-group status rows onto
+        the same transfer, so detection costs zero extra transfers."""
         self.finalize()
-        packed = self.eng.get(self.factor_ext)
+        nf = self.factor_ext.shape[-1]
+        if self._status:
+            if self.nmat > 1:
+                flat = [s.reshape(self.nmat, -1) for s in self._status]
+            else:
+                flat = [s.reshape(-1) for s in self._status]
+            blob = self.eng.get(
+                jnp.concatenate([self.factor_ext] + flat, axis=-1)
+            )
+            packed, self._status_host = blob[..., :nf], blob[..., nf:]
+            self._status = []
+        else:
+            packed = self.eng.get(self.factor_ext)
         host_storage[..., self.plan.cells_concat] = packed[..., :-2]
+
+    def guard_status(self):
+        """Per-group host status arrays in (level, group) dispatch order —
+        (Bp, 4) each, or (nmat, Bp, 4) for the multi-matrix layout; see
+        kernels/fused.py STATUS_COLS for the column layout.  Available
+        after ``read_into``; None when not guarded."""
+        if self._status_host is None:
+            return None
+        out = []
+        pos = 0
+        for row in self.groups:
+            for dg in row:
+                Bp = dg.gidx.shape[0]
+                k = Bp * 4
+                if self.nmat > 1:
+                    out.append(
+                        self._status_host[:, pos:pos + k].reshape(
+                            self.nmat, Bp, 4
+                        )
+                    )
+                else:
+                    out.append(self._status_host[pos:pos + k].reshape(Bp, 4))
+                pos += k
+        return out
 
 
 def _solve_levels(dstore: DevicePanelStore, dy):

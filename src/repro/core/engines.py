@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.guard import GFLOOR_MULT
 from repro.kernels import ops as kops
 from repro.kernels.fused import fused_factor_syrk
 
@@ -151,6 +152,58 @@ def bucket_shape_fused(rows: int, w: int) -> tuple[int, int]:
     return _bucket_pow2(Wp + rows - w, 16), Wp
 
 
+def _host_lane_factor(buf: np.ndarray, rows: int, w: int, Wp: int,
+                      thr: float):
+    """Numpy re-factor of one staged lane (the engine's host fallback tier).
+
+    ``buf`` is the lane's identity-extended (Lp, Wp) panel; returns
+    (factored panel, (mp, mp) update matrix, 4-wide status lane) with the
+    same semantics — including the sign-flipping clamp rule at ``thr`` —
+    as the device programs."""
+    Lp = buf.shape[0]
+    mp = Lp - Wp
+    m = rows - w
+    fp = np.zeros_like(buf)
+    u = np.zeros((mp, mp))
+    idx = np.arange(w, Wp)
+    fp[idx, idx] = 1.0
+    st = np.array([np.inf, 0.0, 0.0, 0.0])
+    if w == 0:
+        return fp, u, st
+    A = buf[:w, :w]
+    W = np.vstack([np.tril(A) + np.tril(A, -1).T, buf[Wp:Wp + m, :w]])
+    with np.errstate(invalid="ignore", divide="ignore", over="ignore"):
+        for k in range(w):
+            d2 = W[k, k]
+            st[0] = np.fmin(st[0], d2)  # NaN-ignoring: keep the real pivot
+            if thr > 0:
+                # GMW81-style growth floor (see kernels/fused.py col_body):
+                # thr = GFLOOR_MULT * max|diag(A)|, so theta^2 * GFLOOR_MULT
+                # / thr = theta^2 / max|diag| and the scaled column stays
+                # below sqrt(max|diag|)
+                col = W[k + 1:, k]
+                theta = float(np.max(np.abs(col))) if col.size else 0.0
+                gfloor = theta * theta * (GFLOOR_MULT / thr)
+                if (not d2 >= thr) or (not d2 >= gfloor):
+                    d2c = max(thr, abs(d2), gfloor)
+                    if not np.isfinite(d2c):
+                        d2c = thr
+                    st[1] += 1.0
+                    st[3] += (d2c - d2) if np.isfinite(d2) else d2c
+                    d2 = d2c
+            dk = np.sqrt(d2)
+            W[k, k] = dk
+            W[k + 1:, k] /= dk
+            W[k + 1:, k + 1:] -= np.outer(W[k + 1:, k], W[k + 1:w, k])
+    fp[:w, :w] = np.tril(W[:w])
+    fp[Wp:Wp + m, :w] = W[w:]
+    if m:
+        u[:m, :m] = W[w:] @ W[w:].T
+    if not np.all(np.isfinite(fp)):
+        st[2] = 1.0
+    return fp, u, st
+
+
 class _Handle:
     __slots__ = ("dev", "rows", "w", "Lp", "Wp", "_u")
 
@@ -224,6 +277,15 @@ class DeviceEngine:
         # ``self`` in the global cache forever) so the jit cache dies with
         # the engine.
         self._programs: dict = {}
+        # optional fault-injection hooks (repro.faults.FaultPlan): exercised
+        # by the chaos tests, None in production.  Kept as a plain attribute
+        # so wiring a plan costs nothing when absent.
+        self.faults = None
+        # degraded-mode counters for the fused-group fallback chain
+        # (primary backend -> xla -> host re-factor of the failing group).
+        # Deliberately NOT in ``stats``: callers assert exact equality on
+        # that dict, and these only move when a dispatch tier fails.
+        self.fallbacks = {"xla": 0, "host": 0, "failed": 0}
 
     def _event(self, tag: str, lvl: int) -> None:
         if (self.events.maxlen is not None
@@ -376,6 +438,115 @@ class DeviceEngine:
 
         return one
 
+    def _one_factor_syrk_guarded(self, Lp: int, Wp: int, clamp: bool):
+        """Guarded per-panel POTRF+TRSM+SYRK for the xla chain: returns
+        (factored panel, update matrix, status) where status is the same
+        4-wide lane the fused Pallas kernel emits — (min pivot d^2,
+        n clamped, nonfinite flag, perturbation magnitude).
+
+        ``clamp=False`` keeps the fast ``lax.linalg.cholesky`` lowering and
+        derives the status post hoc (on breakdown the lowering NaN-fills, so
+        min pivot reads NaN — still detected via the nonfinite flag).
+        ``clamp=True`` (the perturb retry path) runs an explicit rank-1
+        column loop so pivots below ``thr`` (or below the element-growth
+        floor) can be boosted with the same sign-flipping
+        max(thr, |d2|, theta^2/max|diag|) rule as the Pallas kernel."""
+        mp = Lp - Wp
+
+        def status_of(fp, rows, w, mind2, ncl, mag):
+            rI = jnp.arange(Lp)[:, None]
+            cI = jnp.arange(Wp)[None, :]
+            m = rows - w
+            live = ((rI < w) & (cI < w) & (rI >= cI)) | (
+                (rI >= Wp) & (rI < Wp + m) & (cI < w)
+            )
+            ok = jnp.all(jnp.isfinite(jnp.where(live, fp, 0.0)))
+            nf = jnp.where(ok, 0.0, 1.0).astype(fp.dtype)
+            return jnp.stack([mind2, ncl, nf, mag])
+
+        def tail_u(fp, p):
+            if mp == 0:
+                return jnp.zeros((0, 0), p.dtype)
+            b = fp[Wp:]
+            return b @ b.T
+
+        if not clamp:
+
+            def one(p, rows, w, thr):
+                a = p[:Wp, :Wp]
+                a = a + jnp.tril(a, -1).T
+                ld = jax.lax.linalg.cholesky(a, symmetrize_input=False)
+                if Lp > Wp:
+                    x = jax.lax.linalg.triangular_solve(
+                        ld, p[Wp:], left_side=False, lower=True,
+                        transpose_a=True
+                    )
+                    fp = jnp.concatenate([ld, x], axis=0)
+                else:
+                    fp = ld
+                dk = jnp.diagonal(ld)
+                d2 = jnp.where(jnp.arange(Wp) < w, dk * dk, jnp.inf)
+                mind2 = jnp.min(d2)  # NaN-propagating on breakdown
+                zero = jnp.zeros((), p.dtype)
+                return fp, tail_u(fp, p), status_of(
+                    fp, rows, w, mind2, zero, zero
+                )
+
+            return one
+
+        def one(p, rows, w, thr):
+            # explicit right-looking column loop with the sign-flipping
+            # clamp — mirrors kernels/fused.py col_body exactly
+            rI = jnp.arange(Lp)[:, None]
+            cI = jnp.arange(Wp)[None, :]
+            m = rows - w
+            keep = ((rI < w) & (cI < w)) | (
+                (rI >= Wp) & (rI < Wp + m) & (cI < w)
+            )
+            a = jnp.where(keep, p, 0.0)
+            a = jnp.where((rI == cI) & (rI >= w), 1.0, a)
+
+            def col_step(k, carry):
+                a, mind2, ncl, mag = carry
+                colk = jnp.sum(jnp.where(cI == k, a, 0.0), axis=1,
+                               keepdims=True)
+                d2 = jnp.sum(jnp.where(rI == k, colk, 0.0))
+                real = k < w
+                # NaN-ignoring min (see kernels/fused.py): keep the negative
+                # pivot value; NaN-only failures trip the nonfinite flag
+                mind2 = jnp.where(real & (d2 < mind2), d2, mind2)
+                # growth floor theta^2 * BETA / thr = theta^2 / max|diag|
+                # (see kernels/fused.py col_body for the derivation)
+                theta = jnp.max(jnp.where(rI > k, jnp.abs(colk), 0.0))
+                gfloor = theta * theta * (GFLOOR_MULT
+                                          / jnp.maximum(thr, 1e-300))
+                cl = real & (thr > 0) & (
+                    jnp.logical_not(d2 >= thr)
+                    | jnp.logical_not(d2 >= gfloor)
+                )
+                d2c = jnp.maximum(jnp.maximum(thr, jnp.abs(d2)), gfloor)
+                d2c = jnp.where(jnp.isfinite(d2c), d2c, thr)
+                ncl = ncl + jnp.where(cl, 1.0, 0.0).astype(ncl.dtype)
+                dmag = jnp.where(jnp.isfinite(d2), d2c - d2, d2c)
+                mag = mag + jnp.where(cl, dmag, 0.0).astype(mag.dtype)
+                d2 = jnp.where(cl, d2c, d2)
+                dk = jnp.sqrt(d2)
+                colk = colk / dk
+                below = jnp.where(rI > k, colk, 0.0)
+                lcol = jnp.where(rI == k, dk, below)
+                bd = jnp.where(cI > k, below[:Wp].reshape(1, Wp), 0.0)
+                a = a - below @ bd
+                return jnp.where(cI == k, lcol, a), mind2, ncl, mag
+
+            zero = jnp.zeros((), p.dtype)
+            fp, mind2, ncl, mag = jax.lax.fori_loop(
+                0, Wp, col_step,
+                (a, jnp.full((), jnp.inf, p.dtype), zero, zero)
+            )
+            return fp, tail_u(fp, p), status_of(fp, rows, w, mind2, ncl, mag)
+
+        return one
+
     def _batch_factor_syrk_fn(self, Bp: int, Lp: int, Wp: int):
         """Batched fused program — ONE dispatch per (level, bucket) batch.
         Under ``backend='pallas'`` the whole batch runs as a single fused
@@ -451,7 +622,9 @@ class DeviceEngine:
         )
 
     def _fused_group_fn(self, Bp: int, Lp: int, Wp: int, clen: int,
-                        r: int, n_in: int, n_out: int):
+                        r: int, n_in: int, n_out: int, *,
+                        guard: bool = False, clamp: bool = False,
+                        backend: str | None = None):
         """ONE-dispatch group program: gather + apply pending updates +
         batched fused factor + pack, a single jitted call per (level x
         bucket) group — vs the three dispatches of gather_group /
@@ -459,11 +632,20 @@ class DeviceEngine:
         storage (staged per level so uploads overlap earlier levels'
         compute; see repro.core.device_store); ``lb`` (the group's offset in
         the chunk) and ``off`` (its pool slice start) are traced scalars so
-        same-shape groups share one compile."""
-        backend = self.backend
-        one = self._one_factor_syrk(Lp, Wp)
+        same-shape groups share one compile.
 
-        def f(chunk, pool, lb, off, src, lo, hi, gidx, rows, ws, ppack, upack):
+        ``guard`` (static, part of the program key) adds the per-lane status
+        output — the program returns (packed, pool, st) and takes a trailing
+        traced ``thr`` — while guard=False compiles the exact pre-guard
+        program, so guard="off" keeps zero detection overhead.  ``clamp``
+        (static) enables pivot perturbation at ``thr`` in the factor body.
+        ``backend`` overrides the engine backend (the fallback chain retries
+        a failed pallas group through the xla program)."""
+        backend = backend or self.backend
+        one = self._one_factor_syrk(Lp, Wp)
+        one_g = self._one_factor_syrk_guarded(Lp, Wp, clamp) if guard else None
+
+        def gather(chunk, pool, lb, gidx, src, lo, hi):
             pc = jax.lax.dynamic_slice(chunk, (lb,), (r,))
             if n_in:
                 vals = pool[src]  # incoming update entries, destination-sorted
@@ -472,13 +654,9 @@ class DeviceEngine:
             ext = jnp.concatenate(
                 [pc, jnp.zeros(1, pc.dtype), jnp.ones(1, pc.dtype)]
             )
-            buf = ext[gidx]  # (Bp, Lp, Wp) stacked padded panels
-            if backend == "pallas":
-                fp, u = fused_factor_syrk(
-                    buf, rows, ws, interpret=kops._interpret()
-                )
-            else:
-                fp, u = jax.vmap(one)(buf)
+            return ext[gidx]  # (Bp, Lp, Wp) stacked padded panels
+
+        def pack(fp, u, pool, ppack, upack, off):
             packed = fp.reshape(-1)[ppack]
             if n_out:
                 pool = jax.lax.dynamic_update_slice(
@@ -486,13 +664,46 @@ class DeviceEngine:
                 )
             return packed, pool
 
+        if guard:
+
+            def f(chunk, pool, lb, off, src, lo, hi, gidx, rows, ws,
+                  ppack, upack, thr):
+                buf = gather(chunk, pool, lb, gidx, src, lo, hi)
+                if backend == "pallas":
+                    fp, u, st = fused_factor_syrk(
+                        buf, rows, ws, interpret=kops._interpret(),
+                        guard=True, thr=thr
+                    )
+                else:
+                    fp, u, st = jax.vmap(one_g, in_axes=(0, 0, 0, None))(
+                        buf, rows, ws, thr
+                    )
+                packed, pool = pack(fp, u, pool, ppack, upack, off)
+                return packed, pool, st
+
+        else:
+
+            def f(chunk, pool, lb, off, src, lo, hi, gidx, rows, ws,
+                  ppack, upack):
+                buf = gather(chunk, pool, lb, gidx, src, lo, hi)
+                if backend == "pallas":
+                    fp, u = fused_factor_syrk(
+                        buf, rows, ws, interpret=kops._interpret()
+                    )
+                else:
+                    fp, u = jax.vmap(one)(buf)
+                return pack(fp, u, pool, ppack, upack, off)
+
         return self._program(
-            ("fused_group", Bp, Lp, Wp, clen, r, n_in, n_out),
+            ("fused_group", Bp, Lp, Wp, clen, r, n_in, n_out,
+             backend, guard, clamp),
             lambda: jax.jit(f, donate_argnums=1),
         )
 
     def _fused_group_many_fn(self, M: int, Bp: int, Lp: int, Wp: int,
-                             clen: int, r: int, n_in: int, n_out: int):
+                             clen: int, r: int, n_in: int, n_out: int, *,
+                             guard: bool = False, clamp: bool = False,
+                             backend: str | None = None):
         """Multi-matrix fused group program: the single-matrix
         ``_fused_group_fn`` with a leading matrix axis on every value buffer
         (``chunk`` (M, clen), ``pool`` (M, pool)) and the SAME index arrays
@@ -501,10 +712,11 @@ class DeviceEngine:
         runs as ONE dispatch of M*Bp lanes instead of M dispatches of Bp:
         per-group dispatch/driver overhead is paid once per group, not once
         per (matrix, group)."""
-        backend = self.backend
+        backend = backend or self.backend
         one = self._one_factor_syrk(Lp, Wp)
+        one_g = self._one_factor_syrk_guarded(Lp, Wp, clamp) if guard else None
 
-        def f(chunk, pool, lb, off, src, lo, hi, gidx, rows, ws, ppack, upack):
+        def gather(chunk, pool, lb, gidx, src, lo, hi):
             pc = jax.lax.dynamic_slice(chunk, (0, lb), (M, r))
             if n_in:
                 vals = pool[:, src]   # (M, n_in) destination-sorted entries
@@ -517,14 +729,9 @@ class DeviceEngine:
                 [pc, jnp.zeros((M, 1), pc.dtype), jnp.ones((M, 1), pc.dtype)],
                 axis=1,
             )
-            buf = ext[:, gidx].reshape(M * Bp, Lp, Wp)
-            if backend == "pallas":
-                fp, u = fused_factor_syrk(
-                    buf, jnp.tile(rows, M), jnp.tile(ws, M),
-                    interpret=kops._interpret(),
-                )
-            else:
-                fp, u = jax.vmap(one)(buf)
+            return ext[:, gidx].reshape(M * Bp, Lp, Wp)
+
+        def pack(fp, u, pool, ppack, upack, off):
             packed = fp.reshape(M, -1)[:, ppack]
             if n_out:
                 pool = jax.lax.dynamic_update_slice(
@@ -532,8 +739,40 @@ class DeviceEngine:
                 )
             return packed, pool
 
+        if guard:
+
+            def f(chunk, pool, lb, off, src, lo, hi, gidx, rows, ws,
+                  ppack, upack, thr):
+                buf = gather(chunk, pool, lb, gidx, src, lo, hi)
+                if backend == "pallas":
+                    fp, u, st = fused_factor_syrk(
+                        buf, jnp.tile(rows, M), jnp.tile(ws, M),
+                        interpret=kops._interpret(), guard=True, thr=thr,
+                    )
+                else:
+                    fp, u, st = jax.vmap(one_g, in_axes=(0, 0, 0, None))(
+                        buf, jnp.tile(rows, M), jnp.tile(ws, M), thr
+                    )
+                packed, pool = pack(fp, u, pool, ppack, upack, off)
+                return packed, pool, st.reshape(M, Bp, -1)
+
+        else:
+
+            def f(chunk, pool, lb, off, src, lo, hi, gidx, rows, ws,
+                  ppack, upack):
+                buf = gather(chunk, pool, lb, gidx, src, lo, hi)
+                if backend == "pallas":
+                    fp, u = fused_factor_syrk(
+                        buf, jnp.tile(rows, M), jnp.tile(ws, M),
+                        interpret=kops._interpret(),
+                    )
+                else:
+                    fp, u = jax.vmap(one)(buf)
+                return pack(fp, u, pool, ppack, upack, off)
+
         return self._program(
-            ("fused_group_many", M, Bp, Lp, Wp, clen, r, n_in, n_out),
+            ("fused_group_many", M, Bp, Lp, Wp, clen, r, n_in, n_out,
+             backend, guard, clamp),
             lambda: jax.jit(f, donate_argnums=1),
         )
 
@@ -778,6 +1017,8 @@ class DeviceEngine:
     # -- device-resident protocol (repro.core.device_store) -----------------
     def put(self, x: np.ndarray):
         """Host -> device transfer (counted; device-resident staging path)."""
+        if self.faults is not None:
+            x = self.faults.on_put(self, x)
         dev = jax.device_put(x)
         self.stats["transfers_in"] += 1
         self.stats["bytes_in"] += x.nbytes
@@ -822,37 +1063,154 @@ class DeviceEngine:
         )
         return fn(fp, u, pool, g.ppack, g.upack, g.off)
 
-    def fused_group(self, chunk, pool, g, lvl: int = -1):
+    def _group_tiers(self) -> list:
+        """Fallback chain for fused-group dispatch: the primary backend,
+        then xla (if it was not the primary), then a host re-factor of the
+        failing group.  Bounded — each tier runs at most once per group."""
+        tiers = [self.backend]
+        if self.backend != "xla":
+            tiers.append("xla")
+        tiers.append("host")
+        return tiers
+
+    def _run_group_chain(self, many: bool, chunk, pool, g, lvl: int,
+                         guard: bool, thr: float, clamp: bool):
+        """Dispatch one fused group through the fallback chain.
+
+        The first tier runs the fault-injection ``on_dispatch`` hook (so an
+        injected dispatch failure exercises the chain); a tier that raises
+        is logged as a ``fallback:<next tier>`` event and counted in
+        ``self.fallbacks``.  Re-dispatching the same donated pool buffer is
+        safe on backends that ignore donation (CPU); on hardware that
+        honours it the host tier re-derives everything from host copies.
+        If every tier fails, the first error propagates."""
+        Bp, Lp, Wp = g.gidx.shape
+        if many:
+            key_args = (int(chunk.shape[0]), Bp, Lp, Wp, int(chunk.shape[1]),
+                        int(g.ppack.shape[0]), int(g.src.shape[0]),
+                        int(g.upack.shape[0]))
+            build = self._fused_group_many_fn
+        else:
+            key_args = (Bp, Lp, Wp, int(chunk.shape[0]),
+                        int(g.ppack.shape[0]), int(g.src.shape[0]),
+                        int(g.upack.shape[0]))
+            build = self._fused_group_fn
+        args = (chunk, pool, g.lb, g.off, g.src, g.lo, g.hi, g.gidx,
+                g.rows, g.ws, g.ppack, g.upack)
+        first_err = None
+        for i, be in enumerate(self._group_tiers()):
+            if i > 0:
+                self.fallbacks[be] = self.fallbacks.get(be, 0) + 1
+                self._event(f"fallback:{be}", lvl)
+            try:
+                if i == 0 and self.faults is not None:
+                    self.faults.on_dispatch(self, lvl)
+                if be == "host":
+                    out = self._host_fused_group(
+                        chunk, pool, g, many=many, guard=guard, thr=thr,
+                        clamp=clamp
+                    )
+                else:
+                    fn = build(*key_args, guard=guard, clamp=clamp,
+                               backend=be)
+                    out = fn(*args, thr) if guard else fn(*args)
+            except Exception as e:  # noqa: BLE001 — any tier failure degrades
+                if first_err is None:
+                    first_err = e
+                continue
+            if self.faults is not None:
+                out = self.faults.on_group_result(self, out, lvl)
+            return out
+        self.fallbacks["failed"] += 1
+        raise first_err
+
+    def fused_group(self, chunk, pool, g, lvl: int = -1, *,
+                    guard: bool = False, thr: float = 0.0,
+                    clamp: bool = False):
         """Run one (level x bucket) group end to end — gather + apply
         updates + factor + pack — as ONE device dispatch (vs the three of
         gather_group/factor_group/pack_group).  Zero transfers; the dispatch
-        is logged to ``events`` for the async-staging order assertion."""
+        is logged to ``events`` for the async-staging order assertion.
+        With ``guard`` the dispatch also returns the per-lane status rows
+        (see kernels/fused.py STATUS_COLS); failures degrade through
+        ``_run_group_chain``."""
         self.stats["device_calls"] += 1
         self._note_donation(pool, lvl)
         self._event("dispatch", lvl)
-        Bp, Lp, Wp = g.gidx.shape
-        fn = self._fused_group_fn(
-            Bp, Lp, Wp, int(chunk.shape[0]), int(g.ppack.shape[0]),
-            int(g.src.shape[0]), int(g.upack.shape[0])
-        )
-        return fn(chunk, pool, g.lb, g.off, g.src, g.lo, g.hi, g.gidx,
-                  g.rows, g.ws, g.ppack, g.upack)
+        return self._run_group_chain(False, chunk, pool, g, lvl,
+                                     guard, thr, clamp)
 
-    def fused_group_many(self, chunk, pool, g, lvl: int = -1):
+    def fused_group_many(self, chunk, pool, g, lvl: int = -1, *,
+                         guard: bool = False, thr: float = 0.0,
+                         clamp: bool = False):
         """Multi-matrix ``fused_group``: M value streams (leading axis on
         ``chunk``/``pool``) through one pattern's index arrays, factored as
-        ONE dispatch of M*Bp lanes.  Zero transfers."""
+        ONE dispatch of M*Bp lanes.  Zero transfers.  Guarded dispatches
+        return (packed, pool, st) with st (M, Bp, STATUS_COLS)."""
         self.stats["device_calls"] += 1
         self._note_donation(pool, lvl)
         self._event("dispatch", lvl)
-        M = int(chunk.shape[0])
+        return self._run_group_chain(True, chunk, pool, g, lvl,
+                                     guard, thr, clamp)
+
+    def _host_fused_group(self, chunk, pool, g, *, many: bool, guard: bool,
+                          thr: float, clamp: bool):
+        """Last-resort tier: re-derive one group's gather + factor + pack in
+        numpy from host copies of the operands.  Runs only when every device
+        tier raised, so the transfers it needs are counted honestly."""
         Bp, Lp, Wp = g.gidx.shape
-        fn = self._fused_group_many_fn(
-            M, Bp, Lp, Wp, int(chunk.shape[1]), int(g.ppack.shape[0]),
-            int(g.src.shape[0]), int(g.upack.shape[0])
-        )
-        return fn(chunk, pool, g.lb, g.off, g.src, g.lo, g.hi, g.gidx,
-                  g.rows, g.ws, g.ppack, g.upack)
+        mp = Lp - Wp
+        ch = np.asarray(jax.device_get(chunk), dtype=np.float64)
+        # device_get can hand back a read-only view of the device buffer;
+        # the pool is written below (update segments), so take a real copy
+        po = np.array(jax.device_get(pool), dtype=np.float64)
+        idx = {k: np.asarray(jax.device_get(getattr(g, k)))
+               for k in ("src", "lo", "hi", "gidx", "rows", "ws",
+                         "ppack", "upack")}
+        self.stats["transfers_out"] += 1
+        self.stats["bytes_out"] += ch.nbytes + po.nbytes
+        lb, off = int(g.lb), int(g.off)
+        r = idx["ppack"].shape[0]
+        if not many:
+            ch = ch[None]
+            po = po[None]
+        M = ch.shape[0]
+        packed = np.empty((M, r))
+        sts = np.empty((M, Bp, 4))
+        for mi in range(M):
+            pc = ch[mi, lb:lb + r].copy()
+            if idx["src"].size:
+                vals = po[mi, idx["src"]]
+                C = np.concatenate([[0.0], np.cumsum(vals)])
+                pc -= C[idx["hi"]] - C[idx["lo"]]
+            ext = np.concatenate([pc, [0.0], [1.0]])
+            buf = ext[idx["gidx"]]                   # (Bp, Lp, Wp)
+            fp = np.zeros_like(buf)
+            u = np.zeros((Bp, mp, mp))
+            for b in range(Bp):
+                fp[b], ub, sts[mi, b] = _host_lane_factor(
+                    buf[b], int(idx["rows"][b]), int(idx["ws"][b]), Wp,
+                    thr if clamp else 0.0
+                )
+                if mp:
+                    u[b] = ub
+            packed[mi] = fp.reshape(Bp, -1).reshape(-1)[idx["ppack"]]
+            if idx["upack"].size:
+                po[mi, off:off + idx["upack"].size] = \
+                    u.reshape(-1)[idx["upack"]]
+        self.stats["transfers_in"] += 1
+        self.stats["bytes_in"] += packed.nbytes + po.nbytes
+        if many:
+            out_packed = jax.device_put(packed)
+            out_pool = jax.device_put(po)
+            st = jax.device_put(sts)
+        else:
+            out_packed = jax.device_put(packed[0])
+            out_pool = jax.device_put(po[0])
+            st = jax.device_put(sts[0])
+        if guard:
+            return out_packed, out_pool, st
+        return out_packed, out_pool
 
     def invert_diag(self, P):
         """Invert one group's stacked diagonal blocks (finalize-time)."""

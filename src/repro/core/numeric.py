@@ -152,6 +152,11 @@ class CholeskyFactor:
     # accelerator for transfer-free solves
     store: object | None = None
     dstore: object | None = None
+    # breakdown-safety extras (guarded factorizations only): the reduced
+    # per-factorization GuardReport, and the original matrix solves refine
+    # against when the factor carries recorded perturbations or a shift
+    guard_report: object | None = None
+    guard_A: object | None = None
 
     def L_dense(self) -> np.ndarray:
         """Assemble the full dense L (for small-n validation only)."""
@@ -178,7 +183,7 @@ class CholeskyFactor:
         return 2.0 * acc
 
     def solve(self, b: np.ndarray, *, backend: str = "host",
-              engine=None) -> np.ndarray:
+              engine=None, refine: bool | None = None) -> np.ndarray:
         """Solve A x = b using P A P^T = L L^T.
 
         backend  'host' (per-supernode scipy loop, the paper's solve) or
@@ -190,7 +195,28 @@ class CholeskyFactor:
                  solves.
         engine   device backend only: DeviceEngine to stage with when no
                  device-resident factor exists yet (default: a fresh one).
+        refine   run residual-driven refinement against the original matrix
+                 (guarded factorizations only).  Default ``None`` auto-enables
+                 it when this factor carries recorded perturbations or a
+                 diagonal shift, so perturbed factors still solve the
+                 *original* system to full precision.
         """
+        if refine is None:
+            refine = (self.guard_report is not None
+                      and self.guard_report.needs_refine
+                      and self.guard_A is not None)
+        if refine:
+            if self.guard_A is None:
+                raise ValueError(
+                    "refined solve needs the original matrix; this factor "
+                    "carries no guard_A (factor with guard= to record it)"
+                )
+            from repro.core.refine import refine_solve
+            x, hist = refine_solve(self, self.guard_A, b,
+                                   backend=backend, engine=engine)
+            if self.guard_report is not None:
+                self.guard_report.ir_history.append(hist)
+            return x
         if backend == "device":
             return self.solve_device(b, engine=engine)
         if backend != "host":
@@ -377,6 +403,9 @@ def factorize_levels(
     max_batch: int = 256,
     assembly: str = "auto",
     staging: str | None = None,
+    guard: str | None = None,
+    guard_thr: float = 0.0,
+    guard_clamp: bool = False,
 ) -> CholeskyFactor:
     """Level-scheduled batched right-looking factorization.
 
@@ -432,7 +461,15 @@ def factorize_levels(
         or (policy is not None and policy.threshold == 0)
     ):
         return _factorize_levels_device(
-            sym, Aperm, device_engine, max_batch=max_batch, staging=staging
+            sym, Aperm, device_engine, max_batch=max_batch, staging=staging,
+            guard=guard, guard_thr=guard_thr, guard_clamp=guard_clamp,
+        )
+    if guard is not None:
+        raise ValueError(
+            "guarded factorization requires the fully-offloaded "
+            "device-resident path (device engine + full offload, or "
+            "assembly='device'); the host/mixed paths detect breakdown "
+            "through numpy's LinAlgError instead"
         )
     if staging is not None:
         raise ValueError(
@@ -490,6 +527,59 @@ def factorize_levels(
     return CholeskyFactor(sym=sym, panels=panels, stats=stats, store=store)
 
 
+def _reduce_guard(sym, sched, status_groups, *, mode: str, thr: float):
+    """Reduce the per-lane kernel status rows of one factorization into a
+    GuardReport: zip each group's (Bp, 4) status block — (min d^2, n_clamped,
+    nonfinite, clamp magnitude) per lane, pad lanes (inf, 0, 0, 0) — with the
+    schedule's supernode ids, in (level, group, lane) = elimination order, so
+    ``first_broken`` names the first supernode that actually broke."""
+    from repro.core.guard import GuardReport
+
+    rep = GuardReport(guard=mode, n_supernodes=int(sym.nsuper),
+                      perturb_thr=float(thr))
+    it = iter(status_groups)
+    mins: list = []
+    for lvl, lgroups in enumerate(sched.groups):
+        lvl_min = None
+        for bg in lgroups:
+            st = np.asarray(next(it), dtype=np.float64)
+            ids = np.asarray(bg.ids)
+            for j in range(int(ids.shape[0])):
+                mind2, ncl, nf, mag = st[j]
+                snode = int(ids[j])
+                mins.append(mind2)
+                if np.isfinite(mind2):
+                    lvl_min = mind2 if lvl_min is None else min(lvl_min, mind2)
+                clamped = ncl > 0
+                if clamped:
+                    rep.perturbations.append({
+                        "supernode": snode, "level": lvl,
+                        "min_pivot": float(mind2), "n_clamped": int(ncl),
+                        "magnitude": float(mag),
+                    })
+                # broken = nonfinite panel, or a nonpositive/NaN pivot that no
+                # clamp rescued (NaN fails the ``> 0`` comparison on purpose)
+                if (nf > 0) or (not clamped and not (mind2 > 0)):
+                    rep.broken.append({
+                        "supernode": snode, "level": lvl,
+                        "min_pivot": float(mind2),
+                        "nonfinite": bool(nf > 0),
+                    })
+                    if rep.first_broken is None:
+                        rep.first_broken = snode
+                        rep.first_broken_level = lvl
+        rep.level_min_pivots.append(
+            (lvl, None if lvl_min is None else float(lvl_min))
+        )
+    arr = np.asarray(mins, dtype=np.float64)
+    fin = arr[np.isfinite(arr)]
+    if fin.size:
+        rep.min_pivot = float(np.min(fin))
+    elif arr.size and np.any(np.isnan(arr)):
+        rep.min_pivot = float("nan")
+    return rep
+
+
 def _factorize_levels_device(
     sym: SymbolicFactor,
     Aperm: sp.csc_matrix | None,
@@ -498,6 +588,9 @@ def _factorize_levels_device(
     max_batch: int = 256,
     staging: str | None = None,
     store: PanelStore | None = None,
+    guard: str | None = None,
+    guard_thr: float = 0.0,
+    guard_clamp: bool = False,
 ) -> CholeskyFactor:
     """Fully device-resident level-scheduled factorization: assembly runs on
     the device through precomputed index plans (scatter-free fan-in — see
@@ -527,7 +620,8 @@ def _factorize_levels_device(
               else "batch")
     sched = cached_schedule(sym, max_batch=max_batch, bucket=bucket)
     dstore = DevicePanelStore(device_engine, sym, sched, store.storage,
-                              staging=staging)
+                              staging=staging, guard=guard is not None,
+                              guard_thr=guard_thr, guard_clamp=guard_clamp)
     stats = {
         "method": "levels",
         "assembly": "device",
@@ -555,8 +649,14 @@ def _factorize_levels_device(
         stats["level_stats"].append(lrec)
     dstore.read_into(store.storage)  # ONE bulk factor read-back
     device_engine.flush()
+    report = None
+    if guard is not None:
+        report = _reduce_guard(sym, sched, dstore.guard_status(),
+                               mode=guard, thr=guard_thr)
+        stats["guard"] = guard
     return CholeskyFactor(
-        sym=sym, panels=store.panels, stats=stats, store=store, dstore=dstore
+        sym=sym, panels=store.panels, stats=stats, store=store, dstore=dstore,
+        guard_report=report,
     )
 
 
@@ -578,6 +678,8 @@ class BatchCholeskyFactor:
     storage: np.ndarray       # (M, storage_cells)
     stats: dict | None = None
     dstore: object | None = None
+    guard_reports: list | None = None  # per-matrix GuardReport (guarded runs)
+    guard_As: list | None = None       # per-matrix original A (perturb mode)
     _factors: list | None = None
 
     def factor(self, i: int) -> CholeskyFactor:
@@ -590,6 +692,9 @@ class BatchCholeskyFactor:
             f = self._factors[i] = CholeskyFactor(
                 sym=self.sym, panels=store.panels, stats=self.stats,
                 store=store,
+                guard_report=(self.guard_reports[i]
+                              if self.guard_reports else None),
+                guard_A=self.guard_As[i] if self.guard_As else None,
             )
         return f
 
@@ -610,6 +715,9 @@ def factorize_levels_device_many(
     *,
     max_batch: int = 256,
     staging: str | None = None,
+    guard: str | None = None,
+    guard_thr: float = 0.0,
+    guard_clamp: bool = False,
 ) -> BatchCholeskyFactor:
     """Factor M matrices sharing one pattern with ONE set of level-scheduled
     dispatches: ``storage`` is the (M, cells) pre-filled flat PanelStore
@@ -630,7 +738,9 @@ def factorize_levels_device_many(
               else "batch")
     sched = cached_schedule(sym, max_batch=max_batch, bucket=bucket)
     dstore = DevicePanelStore(device_engine, sym, sched, storage,
-                              staging=staging, nmat=M)
+                              staging=staging, nmat=M,
+                              guard=guard is not None, guard_thr=guard_thr,
+                              guard_clamp=guard_clamp)
     stats = {
         "method": "levels_many",
         "assembly": "device",
@@ -647,8 +757,18 @@ def factorize_levels_device_many(
             dstore.assemble_group(lvl, gi)
     dstore.read_into(storage)  # ONE bulk read-back of all M factors
     device_engine.flush()
+    reports = None
+    if guard is not None:
+        stat = dstore.guard_status()
+        reports = [
+            _reduce_guard(sym, sched, [st[m] for st in stat],
+                          mode=guard, thr=guard_thr)
+            for m in range(M)
+        ]
+        stats["guard"] = guard
     return BatchCholeskyFactor(
-        sym=sym, nmat=M, storage=storage, stats=stats, dstore=dstore
+        sym=sym, nmat=M, storage=storage, stats=stats, dstore=dstore,
+        guard_reports=reports,
     )
 
 

@@ -36,6 +36,7 @@ from __future__ import annotations
 import hashlib
 import pathlib
 import pickle
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -267,6 +268,21 @@ class CachedPlan:
         return plan
 
 
+def _plan_nbytes(plan: CachedPlan) -> int:
+    """Estimated host-memory footprint of a CachedPlan: the fill plan plus
+    the symbolic factor's index arrays (the dominant terms; lazily-built
+    schedule/device-plan artifacts are bounded by the same order)."""
+    nb = int(plan.fill_src.nbytes) + int(plan.fill_dst.nbytes)
+    sym = plan.sym
+    for name in ("perm", "parent", "super_ptr", "snode", "sparent"):
+        arr = getattr(sym, name, None)
+        if arr is not None:
+            nb += int(np.asarray(arr).nbytes)
+    for r in sym.rows:
+        nb += int(np.asarray(r).nbytes)
+    return nb
+
+
 class PlanCache:
     """In-memory pattern -> CachedPlan map with optional disk persistence.
 
@@ -275,18 +291,28 @@ class PlanCache:
     (with a ``cache_dir``) persists it.  A second process pointed at the
     same directory loads instead of rebuilding — its first request is a
     *disk hit* (zero analysis builds), not a miss.
+
+    ``max_bytes`` bounds the in-memory footprint: plans are kept in LRU
+    order and the least-recently-used ones are dropped from memory once the
+    estimated total exceeds the budget (``stats["evictions"]`` counts
+    drops).  Eviction is a *demotion*, not a loss: with a ``cache_dir`` the
+    persisted file remains, so a re-request is a disk hit, and without one
+    it is an ordinary rebuild miss.  The most recent plan is never evicted.
     """
 
     def __init__(self, cache_dir=None, *, ordering: str = "nd",
                  merge: bool = True, refine: bool = True,
-                 warm_buckets: tuple = ("batch",)):
+                 warm_buckets: tuple = ("batch",),
+                 max_bytes: int | None = None):
         self.cache_dir = pathlib.Path(cache_dir) if cache_dir else None
         if self.cache_dir is not None:
             self.cache_dir.mkdir(parents=True, exist_ok=True)
         self.ordering, self.merge, self.refine = ordering, merge, refine
         self.warm_buckets = warm_buckets
-        self._mem: dict[str, CachedPlan] = {}
-        self.stats = {"hits": 0, "misses": 0, "disk_hits": 0}
+        self.max_bytes = max_bytes
+        self._mem: OrderedDict[str, CachedPlan] = OrderedDict()
+        self._sizes: dict[str, int] = {}
+        self.stats = {"hits": 0, "misses": 0, "disk_hits": 0, "evictions": 0}
         # rejected disk loads (stale format / corrupt / wrong pattern) — kept
         # out of ``stats`` so existing exact-equality assertions stay valid
         self.disk_rejects = 0
@@ -294,8 +320,23 @@ class PlanCache:
     def __len__(self) -> int:
         return len(self._mem)
 
+    def nbytes(self) -> int:
+        """Estimated in-memory footprint of the cached plans."""
+        return sum(self._sizes.values())
+
     def _path(self, key: str) -> pathlib.Path | None:
         return None if self.cache_dir is None else self.cache_dir / f"plan_{key}.pkl"
+
+    def _admit(self, key: str, plan: CachedPlan) -> None:
+        self._mem[key] = plan
+        self._mem.move_to_end(key)
+        self._sizes[key] = _plan_nbytes(plan)
+        if self.max_bytes is None:
+            return
+        while len(self._mem) > 1 and self.nbytes() > self.max_bytes:
+            old, _ = self._mem.popitem(last=False)
+            self._sizes.pop(old, None)
+            self.stats["evictions"] += 1
 
     def get(self, A: sp.spmatrix) -> CachedPlan:
         key = pattern_fingerprint(A)
@@ -303,6 +344,7 @@ class PlanCache:
         if plan is not None:
             self.stats["hits"] += 1
             plan.uses += 1
+            self._mem.move_to_end(key)  # LRU touch
             return plan
         path = self._path(key)
         if path is not None and path.exists():
@@ -318,11 +360,11 @@ class PlanCache:
             else:
                 self.stats["disk_hits"] += 1
                 plan.uses += 1
-                self._mem[key] = plan
+                self._admit(key, plan)
                 return plan
         self.stats["misses"] += 1
         plan = self.build(A, key=key)
-        self._mem[key] = plan
+        self._admit(key, plan)
         if path is not None:
             plan.save(path)
         return plan

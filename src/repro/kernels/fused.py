@@ -61,8 +61,18 @@ def syrk_tile(mp: int, cap: int = 128) -> int:
     return mp if tu < 8 and tu != mp else tu
 
 
-def _fused_kernel(rows_ref, ws_ref, p_ref, fp_ref, u_ref, acc_ref, *,
-                  Lp: int, Wp: int, nb: int, tu: int):
+#: status-lane row layout (one (1, 128) row per lane, panels.dtype):
+#:   col 0  min unclamped pivot d^2 over the lane's true columns (inf if none)
+#:   col 1  number of pivots clamped (perturbed) during elimination
+#:   col 2  nonfinite flag (1.0 if any NaN/Inf in the factored panel)
+#:   col 3  total perturbation magnitude sum(d2_clamped - d2)
+STATUS_COLS = 4
+STATUS_WIDTH = 128
+
+
+def _fused_kernel(rows_ref, ws_ref, meta_ref, p_ref, fp_ref, u_ref, st_ref,
+                  acc_ref, *, Lp: int, Wp: int, nb: int, tu: int,
+                  guard: bool):
     b = pl.program_id(0)
     tj = pl.program_id(1)
     w = ws_ref[b]
@@ -71,6 +81,14 @@ def _fused_kernel(rows_ref, ws_ref, p_ref, fp_ref, u_ref, acc_ref, *,
 
     ri = jax.lax.broadcasted_iota(jnp.int32, (Lp, 1), 0)
     ci = jax.lax.broadcasted_iota(jnp.int32, (1, Wp), 1)
+    if guard:
+        # perturbation threshold rides in as the float32 bit pattern of an
+        # int32 scalar-prefetch arg: traced, so per-matrix thresholds never
+        # recompile.  thr == 0 means detect-only (never clamps).
+        thr = jax.lax.bitcast_convert_type(
+            meta_ref[0], jnp.float32
+        ).astype(p_ref.dtype)
+        li = jax.lax.broadcasted_iota(jnp.int32, (1, STATUS_WIDTH), 1)
 
     @pl.when(tj == 0)
     def _factor():
@@ -83,6 +101,10 @@ def _fused_kernel(rows_ref, ws_ref, p_ref, fp_ref, u_ref, acc_ref, *,
         a = jnp.where(keep, a, 0.0)
         a = jnp.where((ri == ci) & (ri >= w), 1.0, a)
         acc_ref[...] = a
+        if guard:
+            st_ref[...] = jnp.where(
+                li == 0, jnp.inf, 0.0
+            ).astype(st_ref.dtype)
 
         # 2. blocked POTRF+TRSM over nb-column slabs.  Identity-extension
         # columns never receive updates (their rows of real columns are
@@ -94,11 +116,59 @@ def _fused_kernel(rows_ref, ws_ref, p_ref, fp_ref, u_ref, acc_ref, *,
                 a = acc_ref[...]
                 hi = min(k0 + nb, Wp)
 
-                def col_step(j, a):
+                def col_body(j, a, mind2, ncl, mag):
                     k = k0 + j
                     colk = jnp.sum(jnp.where(ci == k, a, 0.0), axis=1,
                                    keepdims=True)              # (Lp, 1)
-                    dk = jnp.sqrt(jnp.sum(jnp.where(ri == k, colk, 0.0)))
+                    d2 = jnp.sum(jnp.where(ri == k, colk, 0.0))
+                    if guard:
+                        # only the lane's true columns feed the status lane;
+                        # identity-extension pivots (== 1) are not pivots
+                        real = k < w
+                        # NaN-ignoring min: keep the informative (negative)
+                        # pivot even after later columns go NaN; a NaN-only
+                        # failure is still caught by the nonfinite flag
+                        mind2 = jnp.where(real & (d2 < mind2), d2, mind2)
+                        # ~(d2 >= thr) also catches NaN pivots; thr == 0
+                        # (detect-only) never clamps.  Clamp rule is
+                        # sign-flipping with a GMW81-style growth floor,
+                        # max(thr, |d2|, theta^2/max|diag(A)|):  boosting a
+                        # genuinely negative pivot to a tiny thr would divide
+                        # the column by sqrt(thr) and blow up the trailing
+                        # update, so |d2| keeps flipped pivots bounded; and a
+                        # zero pivot under large off-diagonals (saddle-point
+                        # constraint rows after cascaded updates) must be
+                        # floored at theta^2/max|diag| — theta the largest
+                        # below-diagonal entry of the unscaled column — so
+                        # the scaled column never exceeds sqrt(max|diag|)
+                        # and element growth cannot compound geometrically.
+                        # thr = GFLOOR_MULT * max|diag| by construction, so
+                        # theta^2 * GFLOOR_MULT / thr recovers it with no
+                        # extra kernel scalar.
+                        # The perturbation stays a rank-(n clamped)
+                        # modification that refinement with the perturbed
+                        # factor as preconditioner undoes.
+                        from repro.core.guard import GFLOOR_MULT
+
+                        theta = jnp.max(
+                            jnp.where(ri > k, jnp.abs(colk), 0.0)
+                        )
+                        gfloor = theta * theta * (
+                            GFLOOR_MULT / jnp.maximum(thr, 1e-300)
+                        )
+                        cl = real & (thr > 0) & (
+                            jnp.logical_not(d2 >= thr)
+                            | jnp.logical_not(d2 >= gfloor)
+                        )
+                        d2c = jnp.maximum(
+                            jnp.maximum(thr, jnp.abs(d2)), gfloor
+                        )
+                        d2c = jnp.where(jnp.isfinite(d2c), d2c, thr)
+                        ncl = ncl + jnp.where(cl, 1.0, 0.0).astype(ncl.dtype)
+                        dmag = jnp.where(jnp.isfinite(d2), d2c - d2, d2c)
+                        mag = mag + jnp.where(cl, dmag, 0.0).astype(mag.dtype)
+                        d2 = jnp.where(cl, d2c, d2)
+                    dk = jnp.sqrt(d2)
                     colk = colk / dk
                     below = jnp.where(ri > k, colk, 0.0)
                     lcol = jnp.where(ri == k, dk, below)
@@ -108,9 +178,30 @@ def _fused_kernel(rows_ref, ws_ref, p_ref, fp_ref, u_ref, acc_ref, *,
                     bd = jnp.where(trail, below[:Wp].reshape(1, Wp), 0.0)
                     a = a - jnp.dot(below, bd,
                                     preferred_element_type=a.dtype)
-                    return jnp.where(ci == k, lcol, a)
+                    return jnp.where(ci == k, lcol, a), mind2, ncl, mag
 
-                a = jax.lax.fori_loop(0, hi - k0, col_step, a)
+                if guard:
+                    st = st_ref[...]
+                    mind2 = jnp.sum(jnp.where(li == 0, st, 0.0))
+                    ncl = jnp.sum(jnp.where(li == 1, st, 0.0))
+                    mag = jnp.sum(jnp.where(li == 3, st, 0.0))
+
+                    def col_step(j, carry):
+                        return col_body(j, *carry)
+
+                    a, mind2, ncl, mag = jax.lax.fori_loop(
+                        0, hi - k0, col_step, (a, mind2, ncl, mag)
+                    )
+                    st_ref[...] = jnp.where(
+                        li == 0, mind2,
+                        jnp.where(li == 1, ncl, jnp.where(li == 3, mag, st)),
+                    )
+                else:
+
+                    def col_step(j, a):
+                        return col_body(j, a, None, None, None)[0]
+
+                    a = jax.lax.fori_loop(0, hi - k0, col_step, a)
                 if hi < Wp:
                     # one MXU matmul pushes the slab into trailing columns
                     slabL = a[:, k0:hi]                        # (Lp, nb)
@@ -123,6 +214,12 @@ def _fused_kernel(rows_ref, ws_ref, p_ref, fp_ref, u_ref, acc_ref, *,
                 acc_ref[...] = a
 
         fp_ref[0] = acc_ref[...]
+        if guard:
+            st = st_ref[...]
+            bad = jnp.any(jnp.logical_not(jnp.isfinite(acc_ref[...])))
+            st_ref[...] = jnp.where(
+                li == 2, jnp.where(bad, 1.0, 0.0).astype(st.dtype), st
+            )
 
     # 3. SYRK column tile tj of U = tril(T T^T), T the factored tail.
     # Tiles at/after the lane's true tail extent are skipped outright.
@@ -150,7 +247,7 @@ def _fused_kernel(rows_ref, ws_ref, p_ref, fp_ref, u_ref, acc_ref, *,
         acc_ref[...] = fp_ref[0]
 
 
-@functools.partial(jax.jit, static_argnames=("nb", "interpret"))
+@functools.partial(jax.jit, static_argnames=("nb", "interpret", "guard"))
 def fused_factor_syrk(
     panels: jax.Array,
     rows: jax.Array,
@@ -158,7 +255,9 @@ def fused_factor_syrk(
     *,
     nb: int = 128,
     interpret: bool = False,
-) -> tuple[jax.Array, jax.Array]:
+    guard: bool = False,
+    thr=0.0,
+) -> tuple[jax.Array, ...]:
     """Fused batched supernode factorization: ONE pallas_call for
     POTRF + TRSM + SYRK over a stacked group buffer.
 
@@ -166,10 +265,17 @@ def fused_factor_syrk(
             rows [0, w), tail rows at [Wp, Wp + rows - w)); identity
             extensions are optional — the kernel masks from the extents
     rows/ws int32 (Bp,) true per-lane extents; pad lanes are (0, 0)
+    guard   (static) also emit a per-lane status row (see STATUS_COLS);
+            ``thr`` (traced) is the pivot perturbation threshold — pivots
+            with d^2 below it are clamped up to it and counted; thr = 0
+            detects without clamping.  guard=False compiles the exact
+            pre-guard program: zero detection overhead when off.
 
     Returns (fp, u): fp the factored panels in the same layout (identity
     extension in place, strict upper zero), u the (Bp, Lp-Wp, Lp-Wp) update
     matrices, lower triangle valid, zeros outside each lane's true (m, m).
+    With guard=True returns (fp, u, st) where st is (Bp, STATUS_COLS):
+    (min pivot d^2, n clamped, nonfinite flag) per lane.
     """
     Bp, Lp, Wp = panels.shape
     nb = min(nb, Wp)
@@ -184,13 +290,25 @@ def fused_factor_syrk(
     if mp:
         out_shapes.append(jax.ShapeDtypeStruct((Bp, mp, mp), panels.dtype))
         out_specs.append(pl.BlockSpec((1, mp, tu), lambda b, tj, *_: (b, 0, tj)))
-        kernel = functools.partial(
-            _fused_kernel, Lp=Lp, Wp=Wp, nb=nb, tu=tu
+    if guard:
+        out_shapes.append(
+            jax.ShapeDtypeStruct((Bp, STATUS_WIDTH), panels.dtype)
         )
+        out_specs.append(pl.BlockSpec((1, STATUS_WIDTH), lambda b, tj, *_: (b, 0)))
+
+    body = functools.partial(
+        _fused_kernel, Lp=Lp, Wp=Wp, nb=nb, tu=tu, guard=guard
+    )
+    if guard:
+        def kernel(rows_ref, ws_ref, meta_ref, p_ref, *rest):
+            outs, acc_ref = rest[:-1], rest[-1]
+            body(rows_ref, ws_ref, meta_ref, p_ref, outs[0],
+                 outs[1] if mp else None, outs[-1], acc_ref)
     else:
-        def kernel(rows_ref, ws_ref, p_ref, fp_ref, acc_ref):
-            _fused_kernel(rows_ref, ws_ref, p_ref, fp_ref, None, acc_ref,
-                          Lp=Lp, Wp=Wp, nb=nb, tu=tu)
+        def kernel(rows_ref, ws_ref, p_ref, *rest):
+            outs, acc_ref = rest[:-1], rest[-1]
+            body(rows_ref, ws_ref, None, p_ref, outs[0],
+                 outs[1] if mp else None, None, acc_ref)
 
     kw = {}
     if not interpret and _CompilerParams is not None:
@@ -198,19 +316,29 @@ def fused_factor_syrk(
             dimension_semantics=("parallel", "arbitrary")
         )
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3 if guard else 2,
         grid=(Bp, ntj),
         in_specs=[pl.BlockSpec((1, Lp, Wp), lambda b, tj, *_: (b, 0, 0))],
         out_specs=out_specs,
         scratch_shapes=[pltpu.VMEM((Lp, Wp), panels.dtype)],
     )
-    out = pl.pallas_call(
+    call = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=out_shapes,
         interpret=interpret,
         **kw,
-    )(rows, ws, panels)
-    if mp:
-        return out[0], out[1]
-    return out[0], jnp.zeros((Bp, 0, 0), panels.dtype)
+    )
+    if guard:
+        # SMEM scalars are int32: ship thr as the bit pattern of its f32 value
+        meta = jax.lax.bitcast_convert_type(
+            jnp.asarray(thr, jnp.float32).reshape(1), jnp.int32
+        )
+        out = call(rows, ws, meta, panels)
+    else:
+        out = call(rows, ws, panels)
+    fp = out[0]
+    u = out[1] if mp else jnp.zeros((Bp, 0, 0), panels.dtype)
+    if guard:
+        return fp, u, out[-1][:, :STATUS_COLS]
+    return fp, u

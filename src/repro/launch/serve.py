@@ -32,7 +32,13 @@ import scipy.sparse as sp
 
 from repro.core import cholesky, cholesky_many, counters
 from repro.core.engines import DeviceEngine
+from repro.core.guard import BadMatrixError, BreakdownError
 from repro.core.plan_cache import PlanCache
+
+#: a refined solve that cannot push the relative residual below this is
+#: served (best effort) but marks its factor dirty — the factor is evicted
+#: so later requests re-factor instead of degrading silently forever
+DIRTY_RESID = 1e-6
 
 
 @dataclasses.dataclass
@@ -47,6 +53,13 @@ class ServeStats:
     repeat_rebuilds: int = 0     # analysis builds triggered by repeat-pattern
     #                              requests — the zero-rebuild guarantee says
     #                              this stays 0 forever
+    # degraded-mode accounting (never-crash serving; see ``handle``)
+    breakdowns: int = 0          # requests rejected with BreakdownError
+    bad_inputs: int = 0          # requests rejected with BadMatrixError
+    failures: int = 0            # any other exception turned structured
+    recovered: int = 0           # factors served WITH recorded perturbation/
+    #                              shift recovery (solves auto-refine)
+    dirty_evictions: int = 0     # factors evicted on a dirty guard report
 
     def throughput(self) -> dict:
         return {
@@ -57,6 +70,15 @@ class ServeStats:
             "factor_s": self.factor_s,
             "solve_s": self.solve_s,
             "repeat_rebuilds": self.repeat_rebuilds,
+        }
+
+    def degraded(self) -> dict:
+        return {
+            "breakdowns": self.breakdowns,
+            "bad_inputs": self.bad_inputs,
+            "failures": self.failures,
+            "recovered": self.recovered,
+            "dirty_evictions": self.dirty_evictions,
         }
 
 
@@ -71,17 +93,32 @@ class CholeskyServer:
                         (resident jax RHS in -> resident solution out,
                         zero transfers)
     release(h)          drop a factor (bounded factor store)
+    handle(kind, ...)   never-crash wrapper around the above: every request
+                        returns a structured ``{"ok": ...}`` dict; guard
+                        rejections, hostile inputs, and injected faults
+                        become per-request failure results plus degraded-
+                        mode counters instead of a dead server
+
+    ``guard`` (default 'raise') is the breakdown policy applied to every
+    factor request (repro.core.guard); 'perturb' serves indefinite/singular
+    inputs with recorded perturbations and refined solves.  Factors whose
+    refined solves cannot reach DIRTY_RESID are evicted (``dirty_evictions``)
+    so the stream re-factors instead of silently serving a degraded factor.
+    ``max_cache_bytes`` bounds the plan cache (LRU demotion to disk).
     """
 
     def __init__(self, *, cache_dir=None, backend: str | None = "xla",
                  max_batch: int = 256, staging: str | None = None,
-                 warm_buckets: tuple | None = None, verify: bool = False):
+                 warm_buckets: tuple | None = None, verify: bool = False,
+                 guard: str = "raise", max_cache_bytes: int | None = None):
         if warm_buckets is None:
             eff = backend if backend is not None else ""
             warm_buckets = ("fused",) if eff == "pallas" else ("batch",)
-        self.cache = PlanCache(cache_dir=cache_dir, warm_buckets=warm_buckets)
+        self.cache = PlanCache(cache_dir=cache_dir, warm_buckets=warm_buckets,
+                               max_bytes=max_cache_bytes)
         self.engine = DeviceEngine(backend=backend)
         self.max_batch, self.staging = max_batch, staging
+        self.guard = guard
         self.factors: dict = {}
         self._next_id = 0
         self.stats = ServeStats()
@@ -146,35 +183,56 @@ class CholeskyServer:
         t0 = time.perf_counter()
         plan = self._plan_for(A)
         F = cholesky(A, plan=plan, device_engine=self.engine,
-                     max_batch=self.max_batch, staging=self.staging)
+                     max_batch=self.max_batch, staging=self.staging,
+                     guard=self.guard)
         if self.verify:
             self._audit_factor(F)
         self.stats.factor_s += time.perf_counter() - t0
         self.stats.factorizations += 1
         self.stats.factor_requests += 1
+        if F.guard_report is not None and F.guard_report.needs_refine:
+            self.stats.recovered += 1
         return self._store(F)
 
     def factor_many(self, As) -> int:
         As = list(As)
         t0 = time.perf_counter()
         plan = self._plan_for(As[0])
+        # 'shift' is a single-matrix retry loop; batches detect via 'raise'
+        guard = self.guard if self.guard != "shift" else "raise"
         F = cholesky_many(As, plan=plan, device_engine=self.engine,
-                          max_batch=self.max_batch, staging=self.staging)
+                          max_batch=self.max_batch, staging=self.staging,
+                          guard=guard)
         if self.verify:
             self._audit_factor(F)
         self.stats.factor_s += time.perf_counter() - t0
         self.stats.factorizations += len(As)
         self.stats.factor_requests += 1
+        if F.guard_reports and any(r.needs_refine for r in F.guard_reports):
+            self.stats.recovered += 1
         return self._store(F)
 
     def solve(self, handle: int, b):
         """Solve against a resident factor.  ``b``: (n,)/(n, k) for a single
         factor, (M, n)/(M, n, k) for a batch handle; a resident jax array
-        stays resident (zero transfers)."""
+        stays resident (zero transfers).  Perturbed/shifted factors refine
+        toward the original system; a factor whose refinement cannot reach
+        DIRTY_RESID is evicted after serving (best effort, never reused)."""
         F = self.factors[handle]
+        rep = getattr(F, "guard_report", None)
+        if rep is not None and not rep.ok:
+            # defense in depth: never serve from a factor known broken
+            self.release(handle)
+            self.stats.dirty_evictions += 1
+            raise BreakdownError(rep)
         t0 = time.perf_counter()
         if hasattr(F, "nmat"):  # BatchCholeskyFactor
-            x = F.solve(b)
+            if F.guard_reports and any(r.needs_refine for r in F.guard_reports):
+                # per-matrix refined solves toward the original systems
+                b = np.asarray(b)
+                x = np.stack([F.factor(i).solve(b[i]) for i in range(F.nmat)])
+            else:
+                x = F.solve(b)
             ncol = F.nmat * (1 if b.ndim == 2 else int(b.shape[-1]))
         else:
             x = F.solve(b, backend="device", engine=self.engine)
@@ -182,16 +240,68 @@ class CholeskyServer:
         self.stats.solve_s += time.perf_counter() - t0
         self.stats.solves += ncol
         self.stats.solve_requests += 1
+        if self._refine_stalled(F):
+            self.release(handle)
+            self.stats.dirty_evictions += 1
         return x
+
+    @staticmethod
+    def _refine_stalled(F) -> bool:
+        """True when the factor's most recent refined solve stalled above
+        DIRTY_RESID (the factor is 'dirty': best-effort result, evict)."""
+        reps = (F.guard_reports if getattr(F, "guard_reports", None)
+                else [getattr(F, "guard_report", None)])
+        for rep in reps:
+            if rep is None or not rep.ir_history:
+                continue
+            hist = rep.ir_history[-1]
+            if hist and hist[-1] > DIRTY_RESID:
+                rep.downgrades += 1
+                return True
+        return False
 
     def release(self, handle: int) -> None:
         self.factors.pop(handle, None)
+
+    # -- never-crash request surface ----------------------------------------
+    def handle(self, kind: str, *args, **kw) -> dict:
+        """Serve one request, never raising: returns ``{"ok": True,
+        "result": ...}`` or ``{"ok": False, "error": {...}}`` with the
+        failure classified (breakdown / bad_input / failure) and counted.
+        A guarded rejection carries the structured GuardReport dict."""
+        ops = {"factor": self.factor, "factor_many": self.factor_many,
+               "solve": self.solve, "release": self.release}
+        if kind not in ops:
+            self.stats.failures += 1
+            return {"ok": False, "error": {"kind": "failure",
+                                           "type": "ValueError",
+                                           "message": f"unknown request kind {kind!r}"}}
+        try:
+            return {"ok": True, "result": ops[kind](*args, **kw)}
+        except BreakdownError as e:
+            self.stats.breakdowns += 1
+            return {"ok": False, "error": {
+                "kind": "breakdown", "type": "BreakdownError",
+                "message": str(e), "report": e.report.to_dict()}}
+        except BadMatrixError as e:
+            self.stats.bad_inputs += 1
+            return {"ok": False, "error": {
+                "kind": "bad_input", "type": "BadMatrixError",
+                "message": str(e), "validation": e.validation}}
+        except Exception as e:  # noqa: BLE001 — never-crash serving surface
+            self.stats.failures += 1
+            return {"ok": False, "error": {
+                "kind": "failure", "type": type(e).__name__,
+                "message": str(e)}}
 
     def report(self) -> dict:
         rep = self.stats.throughput()
         rep["cache"] = dict(self.cache.stats)
         rep["patterns"] = len(self.cache)
         rep["engine"] = dict(self.engine.stats)
+        rep["guard"] = self.guard
+        rep["degraded"] = self.stats.degraded()
+        rep["fallbacks"] = dict(self.engine.fallbacks)
         if self.verify:
             by_sev: dict = {}
             for f in self.verify_findings:
@@ -234,27 +344,40 @@ def synthetic_stream(*, requests: int, patterns: int, grid: int, many: int,
 
 
 def run_stream(srv: CholeskyServer, reqs: list, *, grid: int, seed: int = 0,
-               check: bool = True) -> dict:
-    """Execute a synthetic trace against a server; returns the report (with
-    per-kind request counts and, with ``check``, max solve residual)."""
+               check: bool = True, mutate=None) -> dict:
+    """Execute a synthetic trace against a server through the never-crash
+    ``handle`` surface; returns the report (with per-kind request counts,
+    rejected-request count, and, with ``check``, the max residual over
+    successful solves).  ``mutate(i, A) -> A'`` lets chaos tests corrupt the
+    i-th request's matrix (hostile/indefinite inputs) — a rejection then
+    shows up in the report's degraded counters, never as an exception."""
     rng = np.random.default_rng(seed)
     last_handle: dict = {}     # pattern -> (handle, A or [As])
     shift = {}
     max_resid = 0.0
     kinds = {"factor": 0, "factor_many": 0, "solve": 0}
-    for kind, pat, m in reqs:
+    rejected = 0
+    for i, (kind, pat, m) in enumerate(reqs):
         k = grid + pat          # distinct grid size per pattern
         shift[pat] = shift.get(pat, 0.0) + 0.25
         kinds[kind] += 1
         if kind == "factor":
             A = _grid_laplacian(k, 1.0 + shift[pat])
-            h = srv.factor(A)
-            last_handle[pat] = (h, A)
+            if mutate is not None:
+                A = mutate(i, A)
+            res = srv.handle("factor", A)
+            if res["ok"]:
+                last_handle[pat] = (res["result"], A)
+            else:
+                rejected += 1
         elif kind == "factor_many":
             As = [_grid_laplacian(k, 1.0 + shift[pat] + 0.1 * j)
                   for j in range(m)]
-            h = srv.factor_many(As)
-            last_handle[pat] = (h, As)
+            res = srv.handle("factor_many", As)
+            if res["ok"]:
+                last_handle[pat] = (res["result"], As)
+            else:
+                rejected += 1
         else:
             if pat not in last_handle:
                 continue
@@ -265,7 +388,12 @@ def run_stream(srv: CholeskyServer, reqs: list, *, grid: int, seed: int = 0,
             else:
                 n = stored.shape[0]
                 b = rng.standard_normal((n, m))
-            x = srv.solve(h, b)
+            res = srv.handle("solve", h, b)
+            if not res["ok"]:
+                rejected += 1
+                last_handle.pop(pat, None)  # handle may have been evicted
+                continue
+            x = res["result"]
             if check:
                 if isinstance(stored, list):
                     r = max(
@@ -279,6 +407,7 @@ def run_stream(srv: CholeskyServer, reqs: list, *, grid: int, seed: int = 0,
                 max_resid = max(max_resid, r)
     rep = srv.report()
     rep["requests"] = kinds
+    rep["rejected"] = rejected
     if check:
         rep["max_solve_resid"] = max_resid
     return rep
@@ -294,6 +423,11 @@ def main():
                     help="matrices per batched factor request")
     ap.add_argument("--nrhs", type=int, default=4)
     ap.add_argument("--backend", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--guard", default="raise",
+                    choices=["off", "raise", "perturb", "shift"],
+                    help="breakdown policy for factor requests")
+    ap.add_argument("--max-cache-bytes", type=int, default=None,
+                    help="LRU bound on the in-memory plan cache")
     ap.add_argument("--cache-dir", default=None,
                     help="persist plans to disk (cross-process reuse)")
     ap.add_argument("--verify", action="store_true",
@@ -303,7 +437,8 @@ def main():
     args = ap.parse_args()
 
     srv = CholeskyServer(cache_dir=args.cache_dir, backend=args.backend,
-                         verify=args.verify)
+                         verify=args.verify, guard=args.guard,
+                         max_cache_bytes=args.max_cache_bytes)
     reqs = synthetic_stream(
         requests=args.requests, patterns=args.patterns, grid=args.grid,
         many=args.many, nrhs=args.nrhs, seed=args.seed,
@@ -317,6 +452,8 @@ def main():
           f"({rep['solves_per_s']:.2f}/s)")
     print(f"  plan cache:     {rep['cache']} "
           f"repeat_rebuilds={rep['repeat_rebuilds']}")
+    print(f"  guard={rep['guard']}  degraded: {rep['degraded']}  "
+          f"fallbacks: {rep['fallbacks']}  rejected={rep['rejected']}")
     print(f"  max solve resid: {rep.get('max_solve_resid', float('nan')):.2e}")
     if "verify" in rep:
         print(f"  verification:   findings by severity {rep['verify']}")

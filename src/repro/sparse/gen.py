@@ -104,6 +104,82 @@ def kkt_like(nx: int, ny: int | None = None, *, reg: float = 1e-2, seed: int = 0
     return _sym_csc(A)
 
 
+def kkt_saddle(nx: int, *, ncon: int | None = None, scale: float = 1.0,
+               seed: int = 0) -> sp.csc_matrix:
+    """TRUE (unregularized) saddle-point KKT system
+
+        [ H   B^T ]
+        [ B   0   ]
+
+    with H the SPD 9-point Laplacian on an nx^2 grid and B a local
+    constraint Jacobian.  Genuinely INDEFINITE: the trailing block carries
+    negative eigenvalues, so plain Cholesky breaks down — this is the
+    breakdown-suite workhorse (guard='raise' identifies the first broken
+    supernode, guard='perturb' factors it with recorded pivot boosts).
+    ``ncon`` controls the constraint count (default nx, kept modest so the
+    perturbation stays low-rank and refinement converges fast); ``scale``
+    sets the magnitude of B."""
+    H = laplacian_2d(nx, stencil=9)
+    n = H.shape[0]
+    m = ncon if ncon is not None else nx
+    rng = np.random.default_rng(seed)
+    base = rng.choice(n, size=m, replace=False)
+    rows = np.repeat(np.arange(m), 2)
+    cols = np.stack([base, (base + 1) % n], axis=1).reshape(-1)
+    vals = scale * (1.0 + rng.random(2 * m))
+    B = sp.csr_matrix((vals, (rows, cols)), shape=(m, n))
+    # explicit (structurally stored) zero diagonal on the constraint block:
+    # keeps the full diagonal in the pattern (shift retries share the plan)
+    Z = sp.csr_matrix((np.zeros(m), (np.arange(m), np.arange(m))),
+                      shape=(m, m))
+    K = sp.bmat([[H, B.T], [B, Z]], format="csc")
+    K.sort_indices()
+    return K
+
+
+def neumann_laplacian(nx: int, ny: int | None = None) -> sp.csc_matrix:
+    """Pure-Neumann graph Laplacian (degree minus adjacency) on an nx-by-ny
+    grid: symmetric positive SEMI-definite with a one-dimensional null space
+    (the constant vector).  Exact Cholesky breaks down at the last pivot;
+    guard='perturb' boosts it and refinement projects solves back."""
+    ny = ny or nx
+    ex, ey = np.ones(nx), np.ones(ny)
+    Ax = sp.diags([ex[:-1], ex[:-1]], [-1, 1])
+    Ay = sp.diags([ey[:-1], ey[:-1]], [-1, 1])
+    Adj = sp.kron(sp.eye(ny), Ax) + sp.kron(Ay, sp.eye(nx))
+    deg = np.asarray(Adj.sum(axis=1)).ravel()
+    L = sp.diags(deg) - Adj
+    L = sp.csc_matrix(L)
+    L.sort_indices()
+    return L
+
+
+def gram_matrix(n: int, *, rank: int | None = None, seed: int = 0) -> sp.csc_matrix:
+    """Rank-deficient Gram matrix G = X^T X with X (rank x n), rank < n:
+    dense-ish PSD with an (n - rank)-dimensional null space.  Small n only —
+    exercises multi-pivot perturbation recovery."""
+    rng = np.random.default_rng(seed)
+    r = rank if rank is not None else max(1, int(0.9 * n))
+    X = rng.standard_normal((r, n))
+    G = sp.csc_matrix(X.T @ X)
+    G.sort_indices()
+    return G
+
+
+def badscale(nx: int, *, span: float = 1e6) -> sp.csc_matrix:
+    """SPD but violently scaled: the 2-D Laplacian conjugated by a diagonal
+    whose entries sweep ``span`` orders of magnitude.  Factors cleanly —
+    a guard='raise' detection pass must NOT flag it (no false positives
+    from the relative perturbation threshold)."""
+    A = laplacian_2d(nx)
+    n = A.shape[0]
+    d = np.power(span, np.linspace(-0.5, 0.5, n))
+    D = sp.diags(d)
+    B = sp.csc_matrix(D @ A @ D)
+    B.sort_indices()
+    return _sym_csc(B)
+
+
 def random_spd(n: int, *, density: float = 0.01, seed: int = 0) -> sp.csc_matrix:
     """Random sparse SPD matrix: symmetric pattern + diagonal dominance."""
     rng = np.random.default_rng(seed)
@@ -142,6 +218,28 @@ MATRIX_SUITE = {
 }
 
 
+# ---------------------------------------------------------------------------
+# Breakdown suite: matrices plain Cholesky CANNOT factor (indefinite,
+# singular, rank-deficient) plus a hostile-but-SPD control.  Kept separate
+# from MATRIX_SUITE — the unguarded benchmarks factor every MATRIX_SUITE
+# entry with host cholesky, which (correctly) raises on these.
+# ---------------------------------------------------------------------------
+BREAKDOWN_SUITE = {
+    # indefinite saddle KKT: guard='raise' must identify supernode 0-level
+    # breakdown, guard='perturb' must factor + refine
+    "kkt_saddle_64": (kkt_saddle, {"nx": 64}, "indefinite-kkt"),
+    # singular PSD (1-dim null space): one pivot hits exact zero
+    "neumann_64": (neumann_laplacian, {"nx": 64}, "singular-psd"),
+    # rank-deficient PSD: many dependent pivots
+    "gram_400": (gram_matrix, {"n": 400}, "rank-deficient"),
+    # hostile scaling control: SPD, must factor CLEAN under guard='raise'
+    "badscale_64": (badscale, {"nx": 64}, "spd-badscale"),
+}
+
+
 def make_suite_matrix(name: str) -> sp.csc_matrix:
-    fn, kwargs, _family = MATRIX_SUITE[name]
+    if name in MATRIX_SUITE:
+        fn, kwargs, _family = MATRIX_SUITE[name]
+    else:
+        fn, kwargs, _family = BREAKDOWN_SUITE[name]
     return fn(**kwargs)

@@ -1,0 +1,190 @@
+"""Fault injection (repro.faults) against the engine fallback chain, the
+in-kernel guards, the plan cache, and the never-crash serving surface.
+Every injector is asserted to have actually fired (``plan.fired``)."""
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import BreakdownError, DeviceEngine, cholesky
+from repro.core.plan_cache import PlanCache
+from repro.faults import (
+    FaultPlan,
+    InjectedDispatchError,
+    make_indefinite,
+    nan_segment,
+    poison_plan_file,
+)
+from repro.launch.serve import CholeskyServer, run_stream, synthetic_stream
+from repro.sparse import laplacian_2d
+
+
+def _resid(A, x, b):
+    return float(np.linalg.norm(A @ x - b) / np.linalg.norm(b))
+
+
+# ---------------------------------------------------------------------------
+# engine fallback chain
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_fail_dispatch_falls_back(backend):
+    A = laplacian_2d(16)
+    eng = DeviceEngine(backend=backend)
+    eng.faults = FaultPlan(fail_dispatch=1)
+    F = cholesky(A, device_engine=eng, guard="raise")
+    assert eng.faults.fired and eng.faults.fired[0][0] == "fail_dispatch"
+    assert sum(eng.fallbacks.values()) == 1
+    assert F.guard_report.ok
+    b = np.ones(A.shape[0])
+    assert _resid(A, F.solve(b), b) < 1e-10
+    assert any(tag.startswith("fallback:") for tag, _lvl in eng.events)
+
+
+def test_fail_always_reaches_host_tier():
+    A = laplacian_2d(16)
+    eng = DeviceEngine(backend="xla")
+    eng.faults = FaultPlan(fail_dispatch=1, fail_always=True)
+    F = cholesky(A, device_engine=eng, guard="raise")
+    # every group re-factored on the host tier, results still correct
+    assert eng.fallbacks.get("host", 0) > 0
+    assert F.guard_report.ok
+    b = np.ones(A.shape[0])
+    assert _resid(A, F.solve(b), b) < 1e-10
+
+
+def test_fallback_exhaustion_without_host_disabled():
+    # sanity: the injected error type is what the chain absorbs
+    with pytest.raises(InjectedDispatchError):
+        raise InjectedDispatchError("boom")
+
+
+# ---------------------------------------------------------------------------
+# silent corruption: only the in-kernel guards can catch it
+# ---------------------------------------------------------------------------
+def test_corrupt_upload_detected_by_guard():
+    A = laplacian_2d(16)
+    eng = DeviceEngine(backend="xla")
+    eng.faults = FaultPlan(corrupt_upload=1)
+    with pytest.raises(BreakdownError) as ei:
+        cholesky(A, device_engine=eng, guard="raise")
+    assert eng.faults.fired[0][0] == "corrupt_upload"
+    assert any(b["nonfinite"] for b in ei.value.report.broken)
+
+
+def test_nan_pool_detected_by_guard():
+    A = laplacian_2d(24)
+    eng = DeviceEngine(backend="xla")
+    eng.faults = FaultPlan(nan_pool_level=0)
+    with pytest.raises(BreakdownError) as ei:
+        cholesky(A, device_engine=eng, guard="raise")
+    assert ("nan_pool", 0) in eng.faults.fired
+    # corruption lands after level 0 completes, so breakdown is downstream
+    assert ei.value.report.first_broken_level >= 1
+
+
+def test_make_indefinite_and_nan_segment():
+    A = laplacian_2d(8)
+    B = make_indefinite(A, i=3, value=-7.0)
+    assert B[3, 3] == -7.0 and (A != B).nnz == 1
+    x = np.ones(16)
+    y = nan_segment(x.copy(), frac=0.25)
+    assert np.isnan(y[:4]).all() and np.isfinite(y[4:]).all()
+
+
+# ---------------------------------------------------------------------------
+# plan-cache faults + LRU eviction
+# ---------------------------------------------------------------------------
+def test_poisoned_plan_file_rebuilds(tmp_path):
+    A = laplacian_2d(12)
+    c1 = PlanCache(cache_dir=tmp_path)
+    c1.get(A)
+    assert c1.stats["misses"] == 1
+    poison_plan_file(tmp_path)
+    c2 = PlanCache(cache_dir=tmp_path)
+    plan = c2.get(A)  # corrupt file rejected, plan rebuilt
+    assert c2.disk_rejects == 1 and c2.stats["misses"] == 1
+    F = cholesky(A, plan=plan, device_engine=DeviceEngine(backend="xla"))
+    b = np.ones(A.shape[0])
+    assert _resid(A, F.solve(b), b) < 1e-10
+
+
+def test_plan_cache_lru_eviction(tmp_path):
+    c = PlanCache(cache_dir=tmp_path, max_bytes=1)  # evict all but newest
+    mats = [laplacian_2d(8 + 2 * i) for i in range(3)]
+    for A in mats:
+        c.get(A)
+    assert c.stats["evictions"] >= 2 and len(c) == 1
+    # eviction demotes to disk, not oblivion: re-get is a disk hit
+    c.get(mats[0])
+    assert c.stats["disk_hits"] == 1
+
+
+def test_plan_cache_lru_keeps_hot_entry():
+    from repro.core.plan_cache import _plan_nbytes
+
+    A, B, C = laplacian_2d(8), laplacian_2d(10), laplacian_2d(12)
+    szC = _plan_nbytes(PlanCache().get(C))
+    c = PlanCache(max_bytes=None)
+    c.get(A)
+    c.get(B)
+    c.get(A)  # A is now most-recently-used
+    # room for C only after exactly one eviction — the LRU entry (B)
+    c.max_bytes = c.nbytes() + szC - 1
+    c.get(C)
+    assert c.stats["evictions"] == 1
+    c.get(A)
+    assert c.stats["hits"] == 2  # A (hot) survived, B was the victim
+
+
+# ---------------------------------------------------------------------------
+# chaos: fault-injected server stream, zero uncaught exceptions
+# ---------------------------------------------------------------------------
+def test_chaos_stream_never_crashes(tmp_path):
+    srv = CholeskyServer(cache_dir=tmp_path, backend="xla", guard="raise")
+    srv.engine.faults = FaultPlan(fail_dispatch=3)
+    reqs = synthetic_stream(requests=14, patterns=3, grid=9, many=2, seed=5)
+
+    def mutate(i, A):
+        if i % 5 == 1:
+            return make_indefinite(A, i=0, value=-50.0)
+        if i % 7 == 3:
+            B = sp.lil_matrix(A.copy())
+            B[0, 0] = np.nan
+            return B.tocsc()
+        return A
+
+    rep = run_stream(srv, reqs, grid=9, seed=5, mutate=mutate)
+    deg = rep["degraded"]
+    assert rep["rejected"] > 0
+    assert deg["breakdowns"] > 0 and deg["bad_inputs"] > 0
+    assert rep.get("max_solve_resid", 0.0) < 1e-8
+    # the injected dispatch failure was absorbed by the fallback chain
+    assert srv.engine.faults.fired
+    assert sum(rep["fallbacks"].values()) >= 1
+
+
+def test_chaos_stream_perturb_guard_serves_indefinite(tmp_path):
+    srv = CholeskyServer(cache_dir=tmp_path, backend="xla", guard="perturb")
+    reqs = synthetic_stream(requests=8, patterns=2, grid=9, many=2, seed=2)
+
+    def mutate(i, A):
+        if i == 2:
+            return make_indefinite(A, i=1, value=-9.0)
+        return A
+
+    rep = run_stream(srv, reqs, grid=9, seed=2, mutate=mutate)
+    assert rep["degraded"]["recovered"] >= 1
+    assert rep.get("max_solve_resid", 0.0) < 1e-8
+
+
+def test_server_handle_structured_errors():
+    srv = CholeskyServer(backend="xla", guard="raise")
+    A = laplacian_2d(8).tolil()
+    A[2, 2] = np.nan
+    res = srv.handle("factor", A.tocsc())
+    assert not res["ok"] and res["error"]["kind"] == "bad_input"
+    res = srv.handle("factor", make_indefinite(laplacian_2d(8), 0, -3.0))
+    assert not res["ok"] and res["error"]["kind"] == "breakdown"
+    assert "report" in res["error"]
+    assert srv.stats.bad_inputs == 1 and srv.stats.breakdowns == 1
+    res = srv.handle("solve", 12345, np.ones(4))  # unknown handle
+    assert not res["ok"] and res["error"]["kind"] == "failure"

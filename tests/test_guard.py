@@ -1,0 +1,234 @@
+"""Breakdown guards end to end: in-kernel detection (status lanes), the
+guard policy layer (off/raise/perturb/shift), perturb-and-refine recovery on
+genuinely indefinite/singular matrices, hostile-input validation, and the
+guard-off program-identity guarantee.  Runs on both kernel backends."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BadMatrixError,
+    BreakdownError,
+    DeviceEngine,
+    cholesky,
+    cholesky_many,
+)
+from repro.sparse import laplacian_2d
+from repro.sparse.gen import (
+    BREAKDOWN_SUITE,
+    badscale,
+    gram_matrix,
+    kkt_saddle,
+    make_suite_matrix,
+    neumann_laplacian,
+)
+
+BACKENDS = ["xla", "pallas"]
+
+
+def _resid(A, x, b):
+    return float(np.linalg.norm(A @ x - b) / np.linalg.norm(b))
+
+
+# ---------------------------------------------------------------------------
+# generators: the breakdown suite must actually break down
+# ---------------------------------------------------------------------------
+def test_kkt_saddle_is_indefinite():
+    K = kkt_saddle(8)
+    assert (np.abs(K.toarray() - K.toarray().T) < 1e-14).all()
+    ev = np.linalg.eigvalsh(K.toarray())
+    assert ev[0] < -1e-3 < 1e-3 < ev[-1]
+    # every diagonal entry is stored (zeros explicit) so shift retries and
+    # perturbation both see the full diagonal in the pattern
+    assert (K.diagonal() == 0).sum() > 0
+    d = K.tocsc()
+    present = np.diff(d.indptr) > 0
+    assert present.all()
+
+
+def test_breakdown_suite_registered():
+    for name in BREAKDOWN_SUITE:
+        A = make_suite_matrix(name)
+        assert A.shape[0] > 0
+
+
+# ---------------------------------------------------------------------------
+# raise: structured breakdown with the first broken supernode
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_raise_identifies_first_broken(backend):
+    K = kkt_saddle(8)
+    eng = DeviceEngine(backend=backend)
+    with pytest.raises(BreakdownError) as ei:
+        cholesky(K, device_engine=eng, guard="raise")
+    rep = ei.value.report
+    assert rep.guard == "raise"
+    assert rep.first_broken is not None
+    assert rep.first_broken_level is not None
+    assert not rep.ok
+    assert rep.broken and rep.broken[0]["supernode"] == rep.first_broken
+    assert str(rep.first_broken) in str(ei.value)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_raise_clean_on_spd(backend):
+    A = laplacian_2d(16)
+    eng = DeviceEngine(backend=backend)
+    F = cholesky(A, device_engine=eng, guard="raise")
+    rep = F.guard_report
+    assert rep.ok and rep.first_broken is None and not rep.perturbations
+    assert rep.min_pivot > 0
+    b = np.ones(A.shape[0])
+    assert _resid(A, F.solve(b), b) < 1e-10
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_raise_no_false_positive_badscale(backend):
+    # diagonal scale span of 1e12 in the pivots: detection must not fire
+    A = badscale(16)
+    F = cholesky(A, device_engine=DeviceEngine(backend=backend), guard="raise")
+    assert F.guard_report.ok
+
+
+# ---------------------------------------------------------------------------
+# perturb: recorded perturbations + refinement to the acceptance bar
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_perturb_recovers_kkt(backend):
+    K = kkt_saddle(8)
+    eng = DeviceEngine(backend=backend)
+    F = cholesky(K, device_engine=eng, guard="perturb")
+    rep = F.guard_report
+    assert rep.ok and rep.n_perturbed > 0
+    assert all(p["n_clamped"] >= 1 and p["magnitude"] > 0
+               for p in rep.perturbations)
+    b = np.arange(K.shape[0], dtype=float) % 5 + 1
+    x = F.solve(b)  # auto-refined: factor knows it is perturbed
+    assert _resid(K, x, b) <= 1e-10
+    assert rep.ir_history and rep.ir_history[-1][-1] <= 1e-10
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_perturb_recovers_singular(backend):
+    eng = DeviceEngine(backend=backend)
+    rng = np.random.default_rng(3)
+    for A in (neumann_laplacian(12), gram_matrix(120, seed=2)):
+        F = cholesky(A, device_engine=eng, guard="perturb")
+        assert F.guard_report.ok and F.guard_report.n_perturbed > 0
+        b = np.asarray(A @ rng.standard_normal(A.shape[0]))  # in range(A)
+        assert _resid(A, F.solve(b), b) <= 1e-10
+
+
+def test_perturb_report_json_roundtrip():
+    K = kkt_saddle(8)
+    F = cholesky(K, device_engine=DeviceEngine(backend="xla"),
+                 guard="perturb")
+    d = json.loads(json.dumps(F.guard_report.to_dict()))
+    assert d["guard"] == "perturb"
+    assert d["n_perturbed"] == F.guard_report.n_perturbed
+    assert {"supernode", "level", "min_pivot", "n_clamped", "magnitude"} <= \
+        set(d["perturbations"][0])
+
+
+# ---------------------------------------------------------------------------
+# shift: global tau*I retry loop
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_shift_recovers_kkt(backend):
+    K = kkt_saddle(8)
+    F = cholesky(K, device_engine=DeviceEngine(backend=backend),
+                 guard="shift")
+    rep = F.guard_report
+    assert rep.ok and rep.guard == "shift" and rep.shift > 0 and rep.shifts >= 1
+    b = np.ones(K.shape[0])
+    assert _resid(K, F.solve(b), b) <= 1e-10
+
+
+# ---------------------------------------------------------------------------
+# hostile inputs: structured validation errors, both backends + host path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_hostile_inputs_rejected(backend):
+    eng = DeviceEngine(backend=backend)
+    A = laplacian_2d(8).tolil()
+    A[3, 3] = np.nan
+    with pytest.raises(BadMatrixError) as ei:
+        cholesky(A.tocsc(), device_engine=eng, guard="raise")
+    assert ei.value.kind == "nonfinite"
+
+    B = laplacian_2d(8).tolil()
+    B[10, 10] = np.inf
+    with pytest.raises(BadMatrixError) as ei:
+        cholesky(B.tocsc(), device_engine=eng, guard="raise")
+    assert ei.value.kind == "nonfinite"
+
+    C = laplacian_2d(8).tolil()
+    C[0, 5] = 17.0  # break symmetry
+    with pytest.raises(BadMatrixError) as ei:
+        cholesky(C.tocsc(), device_engine=eng, guard="raise")
+    assert ei.value.kind == "asymmetric"
+
+
+def test_hostile_inputs_rejected_host_path():
+    A = laplacian_2d(8).tolil()
+    A[3, 3] = np.nan
+    with pytest.raises(BadMatrixError):
+        cholesky(A.tocsc(), guard="raise")  # no engine: host path
+
+
+def test_host_path_guard_raise_and_clean():
+    K = kkt_saddle(8)
+    with pytest.raises(BreakdownError):
+        cholesky(K, guard="raise")
+    A = laplacian_2d(12)
+    F = cholesky(A, guard="raise")
+    assert F.guard_report.ok and F.guard_report.min_pivot > 0
+
+
+# ---------------------------------------------------------------------------
+# guard="off" compiles the exact pre-guard program
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_guard_off_is_pre_guard_program(backend):
+    A = laplacian_2d(16)
+    e1 = DeviceEngine(backend=backend)
+    F1 = cholesky(A, device_engine=e1)
+    e2 = DeviceEngine(backend=backend)
+    F2 = cholesky(A, device_engine=e2, guard="off")
+    assert F2.guard_report is None
+    assert e1.stats == e2.stats  # same dispatches, same transfer bytes
+    np.testing.assert_allclose(F1.L_dense(), F2.L_dense(), rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# many-path guard
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_many_guard_raise_and_perturb(backend):
+    A = laplacian_2d(10)
+    K = kkt_saddle(8)
+    eng = DeviceEngine(backend=backend)
+    # all-SPD batch: clean reports per matrix
+    BF = cholesky_many([A, sp_shift(A, 1.0)], device_engine=eng,
+                       guard="raise")
+    assert all(r.ok for r in BF.guard_reports)
+    # a broken matrix in the batch raises and names it
+    with pytest.raises(BreakdownError):
+        cholesky_many([K, K.copy()],
+                      device_engine=DeviceEngine(backend=backend),
+                      guard="raise")
+    # perturb: batch factors, each factor refines its own solves
+    BF = cholesky_many([K, sp_shift(K, 0.5)],
+                       device_engine=DeviceEngine(backend=backend),
+                       guard="perturb")
+    b = np.ones(K.shape[0])
+    for i, Ai in enumerate([K, sp_shift(K, 0.5)]):
+        x = BF.factor(i).solve(b)
+        assert _resid(Ai, x, b) <= 1e-10
+
+
+def sp_shift(A, s):
+    import scipy.sparse as sp
+
+    return sp.csc_matrix(A + s * sp.eye(A.shape[0]))

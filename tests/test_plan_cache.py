@@ -150,7 +150,8 @@ def test_disk_hit_skips_analysis(tmp_path):
     plan = c2.get(A)
     F = cholesky(A, plan=plan, device_engine=DeviceEngine())
     assert counters.delta(before) == {}
-    assert c2.stats == {"hits": 0, "misses": 0, "disk_hits": 1}
+    assert c2.stats == {"hits": 0, "misses": 0, "disk_hits": 1,
+                        "evictions": 0}
     b = np.ones(A.shape[0])
     assert np.linalg.norm(A @ F.solve(b) - b) < 1e-8
 

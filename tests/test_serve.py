@@ -36,7 +36,8 @@ def test_server_repeat_pattern_zero_rebuilds():
     srv.solve(h, np.ones(81))
     assert counters.delta(before) == {}
     assert srv.stats.repeat_rebuilds == 0
-    assert srv.cache.stats == {"hits": 1, "misses": 1, "disk_hits": 0}
+    assert srv.cache.stats == {"hits": 1, "misses": 1, "disk_hits": 0,
+                               "evictions": 0}
 
 
 def test_server_factor_many_counts_matrices():
